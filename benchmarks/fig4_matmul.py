@@ -1,0 +1,62 @@
+"""Paper Fig. 4: MACs/cycle of the linear (im2col + MatMul) phase by weight
+precision, with ifmap-precision fluctuation — QntPack excluded, exactly as
+the paper isolates it.
+
+CPU analogue of "MACs/cycle": MACs / wall-us of the integer jnp path (the
+XLA program a TPU would run, minus the MXU). The paper's qualitative claims
+under test:
+  (1) 8-bit weights fastest (no unpack);
+  (2) weight precision dominates; ifmap precision is a smaller perturbation;
+  (3) loads-per-operand drops 2x/4x for 4/2-bit (the derived bytes column).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, ref_layer_macs, ref_layer_tensors, timeit
+from repro.core import quant as Q
+from repro.kernels import ops, ref
+
+
+def _linear_only(x_p, w_p, x_bits, w_bits):
+    # im2col + MatMul with int32 accumulator output (no QntPack), jnp path
+    rq = Q.make_requant_params(y_bits=8, eps_phi=2**-10, eps_y=1.0)
+    H, W, _ = 16, 16, 32
+
+    def fn(xp, wp):
+        x = jnp.pad(xp, ((1, 1), (1, 1), (0, 0)))
+        from repro.core import pack as P
+
+        xu = P.unpack(x, x_bits, signed=False).astype(jnp.int32)
+        C = xu.shape[-1]
+        cols = jnp.stack(
+            [jnp.stack([xu[dy : dy + H, dx : dx + W, :] for dx in range(3)], 2)
+             for dy in range(3)], 2).reshape(H * W, 9 * C)
+        w = P.unpack(wp, w_bits, signed=True).astype(jnp.int32)
+        return jax.lax.dot_general(cols, w, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.int32)
+
+    return jax.jit(fn)
+
+
+def run():
+    macs = ref_layer_macs()
+    base_us = None
+    for w_bits in (8, 4, 2):
+        for x_bits in (8, 4, 2):
+            x_p, w_p = ref_layer_tensors(x_bits, w_bits)
+            fn = _linear_only(x_p, w_p, x_bits, w_bits)
+            us = timeit(fn, x_p, w_p)
+            if base_us is None:
+                base_us = us
+            loads_per_mac = (x_bits / 8 + w_bits / 8) / 4  # 32-bit loads/operand pair
+            csv_row(
+                f"fig4_linear_w{w_bits}_x{x_bits}", us,
+                f"macs_per_us={macs / us:.0f};rel_to_w8x8={base_us / us:.3f};"
+                f"loads_per_mac={loads_per_mac:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 6: energy per Reference-Layer inference across precisions.
+
+No power rails on a CI container — the analogue is the standard
+architectural energy model: E = bytes_HBM * pJ/byte + MACs * pJ/MAC, with
+int8 MACs ~4x cheaper than bf16 (MXU) and DRAM access dominating (the same
+physics the paper's GAP-8-vs-STM32 numbers reflect). Constants are
+order-of-magnitude and documented in benchmarks/common.py."""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    PJ_PER_HBM_BYTE, PJ_PER_MAC_BF16, PJ_PER_MAC_INT8, csv_row,
+    ref_layer_bytes, ref_layer_macs,
+)
+
+
+def run():
+    macs = ref_layer_macs()
+    e_fp = sum(ref_layer_bytes(32, 32, 32).values()) * PJ_PER_HBM_BYTE \
+        + macs * PJ_PER_MAC_BF16
+    csv_row("fig6_energy_fp32_baseline", 0.0,
+            f"nJ={e_fp / 1000:.1f};rel=1.00")
+    for x_bits, w_bits, y_bits in [(8, 8, 8), (8, 4, 4), (4, 4, 4),
+                                   (8, 2, 2), (2, 2, 2)]:
+        e = sum(ref_layer_bytes(x_bits, w_bits, y_bits).values()) * PJ_PER_HBM_BYTE \
+            + macs * PJ_PER_MAC_INT8
+        csv_row(f"fig6_energy_u{x_bits}_i{w_bits}_u{y_bits}", 0.0,
+                f"nJ={e / 1000:.1f};rel_savings={e_fp / e:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Beyond-paper benchmark: the paper's technique at LM scale — HBM bytes
+per decoded token under each precision policy (weights + KV cache), the
+quantity that bounds decode latency on v5e (decode is memory-roofline).
+
+Derived analytically from the arch configs (exact byte accounting of the
+packed representation); v5e-projected tokens/s/chip = HBM_BW / bytes."""
+
+from __future__ import annotations
+
+from benchmarks.common import HBM_BW, csv_row
+from repro import configs
+from repro.core.policy import get_policy
+
+
+def _weight_bytes(cfg, policy) -> float:
+    """Approximate packed weight bytes touched per token (dense: all; MoE:
+    active experts only)."""
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    lp = policy.of("ffn_in")
+    wb = (lp.w_bits or 16) / 8
+    if cfg.family == "rwkv":
+        per_layer = (5 * d * d) + d * cfg.rwkv_cfg.ffn_dim * 2 + d * d
+    elif cfg.family == "hybrid":
+        m = cfg.mamba_cfg
+        per_layer = d * (2 * m.d_inner + 2 * m.d_state + m.n_heads) + m.d_inner * d
+    elif cfg.mla:
+        per_layer = (d * cfg.q_lora + cfg.q_lora * cfg.n_heads * (cfg.d_nope + cfg.d_rope)
+                     + d * (cfg.kv_lora + cfg.d_rope)
+                     + cfg.kv_lora * cfg.n_heads * (cfg.d_nope + cfg.d_v)
+                     + cfg.n_heads * cfg.d_v * d)
+        per_layer += 3 * d * cfg.moe_d_ff * (cfg.top_k + cfg.n_shared)  # active experts
+    else:
+        hd = cfg.head_dim
+        per_layer = d * (cfg.n_heads + 2 * cfg.kv_heads) * hd + cfg.n_heads * hd * d
+        if cfg.n_experts:
+            per_layer += 3 * d * (cfg.moe_d_ff or cfg.d_ff) * cfg.top_k
+        else:
+            per_layer += 3 * d * cfg.d_ff
+    return (per_layer * L + 2 * V * d) * wb
+
+
+def _kv_bytes(cfg, policy, seq: int) -> float:
+    bits = policy.kv_cache_bits or 16
+    if cfg.family == "rwkv":
+        return cfg.n_layers * cfg.rwkv_cfg.n_heads * 64 * 64 * 4  # O(1) state
+    if cfg.family == "hybrid":
+        m = cfg.mamba_cfg
+        state = cfg.n_layers * m.n_heads * m.d_state * m.head_dim * 4
+        apps = -(-cfg.n_layers // cfg.attn_every)
+        return state + apps * seq * cfg.kv_heads * cfg.head_dim * 2 * bits / 8
+    if cfg.mla:
+        return cfg.n_layers * seq * (cfg.kv_lora * bits / 8 + cfg.d_rope * 2)
+    eff_seq = min(seq, cfg.window) if cfg.window else seq
+    return cfg.n_layers * eff_seq * cfg.kv_heads * cfg.head_dim * 2 * bits / 8
+
+
+def run():
+    seq = 32_768
+    for arch_id in sorted(configs.ARCHS):
+        cfg = configs.get_arch(arch_id)
+        for pol in ("bf16", "w8a8", "w4a8", "mixed_paper"):
+            policy = get_policy(pol)
+            b = _weight_bytes(cfg, policy) + _kv_bytes(cfg, policy, seq)
+            tps = HBM_BW / b  # per chip, batch 1 bound
+            csv_row(f"lm_decode_bytes_{arch_id}_{pol}", 0.0,
+                    f"GB_per_token={b / 1e9:.3f};v5e_tokens_per_s={tps:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Sweep all 27 precision permutations on the paper's Reference Layer:
+verify each against the oracle and report quantization error vs the float
+layer — the CMix-NN-style accuracy/footprint trade-off table (paper ref [1]).
+
+Run: PYTHONPATH=src python examples/mixed_precision_sweep.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as P
+from repro.core import quant as Q
+from repro.core.policy import PERMUTATIONS, perm_name
+from repro.kernels import ops, ref
+
+
+def main():
+    rng = np.random.RandomState(0)
+    H = W = 16
+    C, Cout = 32, 64
+    x = np.abs(rng.randn(H, W, C)).astype(np.float32)
+    w = (rng.randn(Cout, 9 * C) * 0.1).astype(np.float32)
+    xpad = np.pad(x, ((1, 1), (1, 1), (0, 0)))
+    cols = np.stack(
+        [np.stack([xpad[dy:dy + H, dx:dx + W, :] for dx in range(3)], 2)
+         for dy in range(3)], 2).reshape(H * W, -1)
+    beta_y = 8.0
+    y_f = np.clip(cols @ w.T, 0, beta_y).reshape(H, W, Cout)
+
+    print(f"{'kernel':24s} {'bytes':>6s} {'vs fp32':>8s} {'mean|err|':>10s}")
+    for x_bits, w_bits, y_bits in PERMUTATIONS:
+        beta_x = float(x.max()) * 1.001
+        xq, eps_x = Q.quantize_act(jnp.asarray(x), beta_x, x_bits)
+        wq, eps_w = Q.quantize_weight(jnp.asarray(w), w_bits)
+        x_p, w_p = P.pack(xq, x_bits), P.pack(wq, w_bits)
+        eps_y = Q.ACT_SPECS[y_bits].scale_from_range(beta_y)
+        rq = Q.make_requant_params(
+            y_bits=y_bits, eps_phi=float(eps_x * eps_w), eps_y=float(eps_y))
+        y_p = ops.conv2d(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits,
+                         y_bits=y_bits, impl="jnp")
+        want = ref.conv2d_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits,
+                              y_bits=y_bits)
+        assert (np.asarray(y_p) == np.asarray(want)).all(), "oracle mismatch"
+        y = np.asarray(P.unpack(y_p, y_bits, signed=False), np.float32) * float(eps_y)
+        err = float(np.mean(np.abs(y.reshape(H, W, Cout) - y_f)))
+        nbytes = x_p.size + w_p.size + y_p.size
+        fp = (x.nbytes + w.nbytes + y_f.nbytes)
+        print(f"{perm_name(x_bits, w_bits, y_bits):24s} {nbytes:6d} "
+              f"{fp / nbytes:7.1f}x {err:10.4f}")
+    print("all 27 permutations bit-exact vs oracle")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each assigned architecture has its own module with the exact published
+config; ``reduced()`` shrinks any config to a CPU-runnable smoke-test size
+of the same family (assignment requirement)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import (
+    deepseek_v3_671b,
+    granite_moe_1b,
+    h2o_danube_1p8b,
+    internlm2_1p8b,
+    qwen1p5_4b,
+    qwen2_vl_7b,
+    refconv,
+    rwkv6_7b,
+    stablelm_3b,
+    whisper_tiny,
+    zamba2_1p2b,
+)
+from repro.configs.shapes import SHAPES, ShapeCfg, input_specs, shape_applicable
+from repro.models.model import ArchConfig
+
+ARCHS: dict[str, ArchConfig] = {
+    m.ARCH.name: m.ARCH
+    for m in (
+        zamba2_1p2b, whisper_tiny, deepseek_v3_671b, granite_moe_1b,
+        internlm2_1p8b, h2o_danube_1p8b, qwen1p5_4b, stablelm_3b,
+        rwkv6_7b, qwen2_vl_7b,
+    )
+}
+
+REFCONV = refconv.ARCH
+
+
+def get_arch(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}") from None
+
+
+def reduced(cfg: ArchConfig, *, layers: int = 2) -> ArchConfig:
+    """Family-preserving tiny config for CPU smoke tests."""
+    n_heads = min(cfg.n_heads, 4)
+    kv_heads = max(1, min(cfg.kv_heads, n_heads, 2 if cfg.kv_heads < cfg.n_heads else n_heads))
+    upd: dict = dict(
+        name=cfg.name + "-smoke",
+        n_layers=max(layers, 2),
+        d_model=64,
+        n_heads=n_heads,
+        kv_heads=kv_heads,
+        head_dim=16,
+        d_ff=128,
+        vocab=256,
+    )
+    if cfg.family == "hybrid":
+        upd.update(n_layers=5, attn_every=2, ssm_state=16)
+    if cfg.family == "encdec":
+        upd.update(enc_layers=2)
+    if cfg.n_experts:
+        upd.update(n_experts=4, top_k=2, moe_d_ff=32, shared_d_ff=32,
+                   dense_layers=min(cfg.dense_layers, 1))
+    if cfg.mla:
+        upd.update(q_lora=32, kv_lora=16, d_nope=16, d_rope=8, d_v=16, head_dim=16)
+    if cfg.family == "vlm":
+        upd.update(mrope_sections=(4, 2, 2), n_patches=4)
+    if cfg.family == "rwkv":
+        upd.update(n_heads=4, kv_heads=4, head_dim=16, d_model=64)
+    if cfg.window:
+        upd.update(window=8)
+    return dataclasses.replace(cfg, **upd)
+
+
+__all__ = [
+    "ARCHS", "REFCONV", "SHAPES", "ShapeCfg", "ArchConfig",
+    "get_arch", "reduced", "input_specs", "shape_applicable",
+]

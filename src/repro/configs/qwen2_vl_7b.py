@@ -1,0 +1,10 @@
+"""qwen2-vl-7b [vlm]: M-RoPE, dynamic-resolution vision (frontend STUB per
+assignment: precomputed patch embeddings). [arXiv:2409.12191; hf]
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064."""
+from repro.models.model import ArchConfig
+
+ARCH = ArchConfig(
+    name="qwen2-vl-7b", family="vlm", n_layers=28, d_model=3584,
+    n_heads=28, kv_heads=4, d_ff=18944, vocab=152064,
+    mrope_sections=(16, 24, 24), n_patches=1024, rope_theta=1_000_000.0,
+)

@@ -1,0 +1,9 @@
+"""rwkv6-7b [ssm] "Finch": attention-free, data-dependent decay.
+[arXiv:2404.05892; hf] 32L d_model=4096 d_ff=14336 vocab=65536.
+State is O(1) in sequence length -> long_500k runs."""
+from repro.models.model import ArchConfig
+
+ARCH = ArchConfig(
+    name="rwkv6-7b", family="rwkv", n_layers=32, d_model=4096,
+    n_heads=64, kv_heads=64, d_ff=14336, vocab=65536, norm="layer",
+)

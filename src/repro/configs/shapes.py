@@ -1,0 +1,76 @@
+"""Assigned input-shape sets and ShapeDtypeStruct input specs per arch.
+
+Shapes (LM-family, per assignment):
+  train_4k     seq 4,096   x global_batch 256   -> train_step
+  prefill_32k  seq 32,768  x global_batch 32    -> serve prefill (forward)
+  decode_32k   seq 32,768  x global_batch 128   -> serve_step (1 new token,
+                                                   KV cache of seq_len)
+  long_500k    seq 524,288 x global_batch 1     -> serve_step; sub-quadratic
+                                                   archs only (DESIGN Sec. 8)
+
+Enc-dec (whisper): seq splits evenly into encoder frames + decoder tokens.
+VLM (qwen2-vl): patch embeddings are precomputed stubs via input_specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """The long_500k sub-quadratic rule. Returns (ok, reason_if_not)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (f"{cfg.name} is pure full-attention (quadratic); "
+                       "long_500k skipped per assignment rule")
+    return True, ""
+
+
+def f_specs(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train/prefill -> the forward batch; decode -> (tokens, pos); the cache
+    spec is derived separately via jax.eval_shape on init_cache.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            half = S // 2
+            return {
+                "frames": f_specs((B, half, cfg.d_model), jnp.bfloat16),
+                "tokens": f_specs((B, half), jnp.int32),
+            }
+        batch = {"tokens": f_specs((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["patches"] = f_specs((B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+            batch["positions"] = f_specs((3, B, S), jnp.int32)
+        return batch
+    # decode: one new token against a cache of length S
+    return {
+        "tokens": f_specs((B, 1), jnp.int32),
+        "pos": f_specs((), jnp.int32),
+    }

@@ -1,0 +1,10 @@
+"""whisper-tiny [audio enc-dec]: 4L enc + 4L dec, d_model=384 6H (kv=6)
+d_ff=1536 vocab=51865 [arXiv:2212.04356]. Conv frontend is a STUB per
+assignment: input_specs provides precomputed frame embeddings."""
+from repro.models.model import ArchConfig
+
+ARCH = ArchConfig(
+    name="whisper-tiny", family="encdec", n_layers=4, enc_layers=4,
+    d_model=384, n_heads=6, kv_heads=6, d_ff=1536, vocab=51865,
+    norm="layer", act="gelu",
+)

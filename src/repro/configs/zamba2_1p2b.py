@@ -1,0 +1,11 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared attention block.
+[arXiv:2411.15242; hf] 38L d_model=2048 32H (GQA kv=32) d_ff=8192
+vocab=32000, ssm_state=64. Shared attn applied every 6 mamba layers
+(single shared weight set — DESIGN.md Sec. 11)."""
+from repro.models.model import ArchConfig
+
+ARCH = ArchConfig(
+    name="zamba2-1.2b", family="hybrid", n_layers=38, d_model=2048,
+    n_heads=32, kv_heads=32, d_ff=8192, vocab=32000,
+    ssm_state=64, attn_every=6,
+)

@@ -1,0 +1,204 @@
+"""QuantizedLinear — every projection in the model zoo goes through here.
+
+Two modes, same params tree shape discipline:
+  * ``train``  — QAT: fake-quant weights (STE) and activations (PACT, learnable
+    clip beta), bf16/f32 matmul. Differentiable; the paper's training recipe
+    (Sec. 2.1 cites linear quantization-aware training / PACT).
+  * ``serve``  — the true integer path: weights live PACKED sub-byte in HBM,
+    activations are quantized (signed, offset-binary storage), the matmul is
+    the mpmm kernel (int8 MXU dot + int32 accum), output dequantized to the
+    compute dtype. This is the paper's inference library at LM scale.
+
+Weight layout is PULP-NN's filter-major (d_out, d_in): the contraction axis is
+the packed axis, so packed blocks stream contiguously.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack as P
+from repro.core import quant as Q
+from repro.core.policy import LayerPrecision
+from repro.kernels import ops
+
+
+def linear_init(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    lp: LayerPrecision,
+    *,
+    bias: bool = False,
+    mode: str = "train",
+    init_scale: float = 1.0,
+    dtype=jnp.float32,
+) -> dict:
+    """Init params for one linear. ``serve`` mode creates packed-weight
+    placeholders (what a converted checkpoint holds)."""
+    kw, _ = jax.random.split(key)
+    std = init_scale / (d_in**0.5)
+    p: dict = {}
+    if mode == "serve" and lp.quantized:
+        rw = P.pack_ratio(lp.w_bits)
+        if d_in % rw:
+            raise ValueError(f"d_in={d_in} not divisible by pack ratio {rw}")
+        # deterministic placeholder packed weights (dry-run never materializes)
+        wq = jax.random.randint(kw, (d_out, d_in), -127, 128, jnp.int32)
+        spec = Q.WGT_SPECS[lp.w_bits]
+        wq = jnp.clip(wq, spec.qmin, spec.qmax).astype(jnp.int8)
+        p["w_packed"] = P.pack(wq, lp.w_bits)
+        p["eps_w"] = jnp.asarray(std * 2.0 / spec.qmax, jnp.float32)
+    else:
+        p["w"] = (jax.random.normal(kw, (d_out, d_in), jnp.float32) * std).astype(dtype)
+    if lp.act_quantized:
+        p["beta"] = jnp.asarray(6.0, jnp.float32)  # PACT clip, learnable in QAT
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear_apply(
+    params: dict,
+    x: jax.Array,
+    lp: LayerPrecision,
+    *,
+    mode: str = "train",
+    impl: ops.Impl = "auto",
+) -> jax.Array:
+    """y = x @ W^T (+ b), under the layer's precision assignment."""
+    out_dtype = x.dtype
+    *lead, d_in = x.shape
+    x2 = x.reshape(-1, d_in)
+
+    if mode == "train" or not lp.quantized:
+        w = params.get("w")
+        if w is None:  # serve-mode params but bf16 execution requested
+            raise ValueError("params lack 'w'; converted for serving only")
+        if mode == "train" and lp.quantized:
+            w = Q.fake_quant_weight(w.astype(jnp.float32), lp.w_bits).astype(w.dtype)
+        if mode == "train" and lp.act_quantized:
+            x2 = Q.fake_quant_act_signed(
+                x2.astype(jnp.float32), params["beta"], lp.x_bits
+            ).astype(out_dtype)
+        y = jax.lax.dot_general(
+            x2, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        # ---- integer serving path (the paper's library) ----
+        if "w_packed" in params:
+            w_p, eps_w = params["w_packed"], params["eps_w"]
+        else:  # on-the-fly conversion (tests / small models)
+            wq, eps_w = Q.quantize_weight(params["w"].astype(jnp.float32), lp.w_bits)
+            w_p = P.pack(wq, lp.w_bits)
+        if lp.act_quantized:
+            xq, eps_x = Q.quantize_act_signed(
+                x2.astype(jnp.float32), params["beta"], lp.x_bits
+            )
+            x_p = P.pack(xq, lp.x_bits)
+            y = ops.mpmm(
+                x_p, w_p, None,
+                x_bits=lp.x_bits, w_bits=lp.w_bits, y_bits=8, x_signed=True,
+                out_kind="f32", out_scale=eps_x * eps_w, impl=impl,
+            )
+        else:
+            # weight-only quantization: in-kernel unpack + dequant + bf16 MXU
+            y = ops.wdqmm(x2, w_p, eps_w, w_bits=lp.w_bits, impl=impl)
+    if "b" in params:
+        y = y + params["b"]
+    return y.astype(out_dtype).reshape(*lead, -1)
+
+
+def experts_init(
+    key: jax.Array,
+    n_experts: int,
+    d_in: int,
+    d_out: int,
+    lp: LayerPrecision,
+    *,
+    mode: str = "train",
+    dtype=jnp.float32,
+) -> dict:
+    """Batched expert weights (E, d_out, d_in) — one QuantizedLinear per expert."""
+    keys = jax.random.split(key, n_experts)
+    return jax.vmap(
+        lambda k: linear_init(k, d_in, d_out, lp, mode=mode, dtype=dtype)
+    )(keys)
+
+
+def experts_apply(
+    params: dict,
+    x: jax.Array,  # (E, C, d_in)
+    lp: LayerPrecision,
+    *,
+    mode: str = "train",
+    impl: ops.Impl = "auto",
+) -> jax.Array:
+    """Per-expert batched linear: (E, C, d_in) -> (E, C, d_out)."""
+    return jax.vmap(
+        lambda p, xe: linear_apply(p, xe, lp, mode=mode, impl=impl)
+    )(params, x)
+
+
+def convert_linear_to_serving(params: dict, lp: LayerPrecision) -> dict:
+    """Fold trained weights into the packed integer representation."""
+    if not lp.quantized or "w" not in params:
+        return params
+    wq, eps_w = Q.quantize_weight(params["w"].astype(jnp.float32), lp.w_bits)
+    out = {k: v for k, v in params.items() if k != "w"}
+    out["w_packed"] = P.pack(wq, lp.w_bits)
+    out["eps_w"] = eps_w.astype(jnp.float32)
+    return out
+
+
+#: path-name -> policy layer class (mirrors launch.mesh col/row tables)
+_NAME_TO_CLASS = {
+    "wq": "attn_qkv", "wk": "attn_qkv", "wv": "attn_qkv",
+    "wq_a": "attn_qkv", "wq_b": "attn_qkv", "wkv_a": "attn_qkv",
+    "wkv_b": "attn_qkv", "wr": "attn_qkv", "wg": "attn_qkv",
+    "wo": "attn_out",
+    "up": "ffn_in", "gate": "ffn_in", "ck": "ffn_in", "cr": "ffn_in",
+    "down": "ffn_out", "cv": "ffn_out",
+    "in_proj": "ssm_proj", "out_proj": "ssm_proj",
+    "router": "router", "head": "head", "patch_proj": "embed",
+    "mtp_proj": "head",
+}
+
+
+def convert_model_to_serving(params: dict, policy) -> dict:
+    """Checkpoint conversion: fold every QAT-trained linear in a model's
+    param tree into its packed integer form under ``policy``. Stacked
+    (scan) and expert (E-leading) weights convert via vmap; everything
+    else (norms, embeddings, SSM dynamics) passes through unchanged."""
+    import jax
+
+    def convert(path, subtree):
+        return subtree  # placeholder (tree_map_with_path walks leaves only)
+
+    def walk(node, parent=""):
+        if isinstance(node, dict):
+            if "w" in node and parent in _NAME_TO_CLASS:
+                lp = policy.of(_NAME_TO_CLASS[parent])
+                if not lp.quantized:
+                    return node
+                fn = lambda p: convert_linear_to_serving(p, lp)
+                extra = node["w"].ndim - 2
+                for _ in range(extra):  # stacked layers / experts
+                    fn = jax.vmap(fn)
+                keep = {k: v for k, v in node.items() if k not in ("w", "b", "beta")}
+                conv = fn({"w": node["w"]})
+                out = {**keep, **conv}
+                for k in ("b", "beta"):
+                    if k in node:
+                        out[k] = node[k]
+                return out
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, parent) for v in node]
+        return node
+
+    return walk(params)

@@ -1,0 +1,120 @@
+"""Sub-byte packing along the last axis — the TPU analogue of XpulpV2
+``bext`` (bit-extract, Fig. 2) and ``bins`` (bit-insert, Fig. 3).
+
+Layout: little-endian within a byte along the feature (last) axis:
+  4-bit: byte b holds elements [2b] (low nibble), [2b+1] (high nibble)
+  2-bit: byte b holds elements [4b..4b+3], 2 bits each, low-to-high
+  8-bit: identity.
+
+This mirrors the paper's HWC packing of adjacent channel pixels into one byte;
+our feature axis is both the packing axis and the *next* layer's contraction
+axis, so packed blocks stream contiguously HBM -> VMEM.
+
+All ops are pure shifts/masks (VPU work on TPU); sign extension for weights
+uses the classic (v << (8-b)) >> (8-b) arithmetic-shift pair — the exact
+semantics of the paper's sign-extending ``bext``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_ratio(bits: int) -> int:
+    """Elements per storage byte."""
+    if bits not in (2, 4, 8):
+        raise ValueError(f"unsupported bits: {bits}")
+    return 8 // bits
+
+
+def packed_width(n: int, bits: int) -> int:
+    r = pack_ratio(bits)
+    if n % r:
+        raise ValueError(f"axis size {n} not divisible by pack ratio {r} ({bits}-bit)")
+    return n // r
+
+
+def _as_u8(p: jax.Array) -> jax.Array:
+    """Reinterpret a byte tensor as uint8 (exact bit pattern)."""
+    if p.dtype == jnp.uint8:
+        return p
+    if p.dtype == jnp.int8:
+        return jax.lax.bitcast_convert_type(p, jnp.uint8)
+    raise TypeError(f"expected a byte tensor, got {p.dtype}")
+
+
+def pack(q: jax.Array, bits: int) -> jax.Array:
+    """Pack byte-held {2,4,8}-bit values along the last axis. ``bins`` analogue.
+
+    Works for signed (int8) or unsigned (uint8) values — two's-complement low
+    bits are kept. Packed bytes are returned as int8 bit patterns.
+    """
+    if bits == 8:
+        return q if q.dtype == jnp.int8 else jax.lax.bitcast_convert_type(q, jnp.int8)
+    r = pack_ratio(bits)
+    mask = (1 << bits) - 1
+    *lead, n = q.shape
+    if n % r:
+        raise ValueError(f"last axis {n} not divisible by {r}")
+    u = q.astype(jnp.int32) & mask  # keep low `bits` bits (two's complement)
+    u = u.reshape(*lead, n // r, r)
+    shifts = jnp.arange(r, dtype=jnp.int32) * bits
+    word = jnp.sum(u << shifts, axis=-1)  # < 256, fits a byte
+    # reinterpret the low byte as int8 (two's complement)
+    return jax.lax.bitcast_convert_type(word.astype(jnp.uint8), jnp.int8)
+
+
+def unpack(p: jax.Array, bits: int, *, signed: bool) -> jax.Array:
+    """Unpack to int8 values. ``bext`` analogue (with sign extension if signed).
+
+    One int8 load yields 2 (4-bit) or 4 (2-bit) ready operands — the paper's
+    loads-per-operand amortization, applied to HBM->VMEM traffic.
+    """
+    if bits == 8:
+        if signed:
+            return p if p.dtype == jnp.int8 else jax.lax.bitcast_convert_type(p, jnp.int8)
+        return _as_u8(p)
+    r = pack_ratio(bits)
+    mask = (1 << bits) - 1
+    *lead, np_ = p.shape
+    u = _as_u8(p).astype(jnp.int32)
+    shifts = jnp.arange(r, dtype=jnp.int32) * bits
+    v = (u[..., None] >> shifts) & mask  # (..., np_, r)
+    if signed:
+        v = (v << (8 - bits)).astype(jnp.int8)
+        v = jnp.right_shift(v, 8 - bits)  # arithmetic: sign-extends
+    else:
+        v = v.astype(jnp.uint8)
+    return v.reshape(*lead, np_ * r)
+
+
+# Numpy twins for host-side parameter preparation / tests -------------------
+
+
+def pack_np(q: np.ndarray, bits: int) -> np.ndarray:
+    if bits == 8:
+        return q.view(np.int8) if q.dtype in (np.int8, np.uint8) else q.astype(np.int8)
+    r = pack_ratio(bits)
+    mask = (1 << bits) - 1
+    *lead, n = q.shape
+    u = (q.astype(np.int32) & mask).reshape(*lead, n // r, r)
+    shifts = (np.arange(r) * bits).astype(np.int32)
+    word = np.sum(u << shifts, axis=-1).astype(np.uint8)
+    return word.view(np.int8)
+
+
+def unpack_np(p: np.ndarray, bits: int, *, signed: bool) -> np.ndarray:
+    if bits == 8:
+        return p.view(np.int8) if signed else p.view(np.uint8)
+    r = pack_ratio(bits)
+    mask = (1 << bits) - 1
+    u = p.view(np.uint8).astype(np.int32)
+    shifts = (np.arange(r) * bits).astype(np.int32)
+    v = (u[..., None] >> shifts) & mask
+    if signed:
+        v = ((v << (8 - bits)).astype(np.int8) >> (8 - bits)).astype(np.int8)
+    else:
+        v = v.astype(np.uint8)
+    return v.reshape(*p.shape[:-1], p.shape[-1] * r)

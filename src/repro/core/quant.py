@@ -1,0 +1,320 @@
+"""Layer-wise linear quantization math, faithful to the paper's Sec. 2.1.
+
+Contract (Bruschi et al., CF'20, Eq. 1-3):
+  t = alpha_t + eps_t * INT(t),   eps_t = (beta_t - alpha_t) / 2^N
+  activations / outputs: unsigned, alpha = 0       -> INT in [0, 2^N)
+  weights:               signed, symmetric          -> INT in [-2^(N-1), 2^(N-1))
+  accumulator phi = linear(INT(w), INT(x)):         int32, always
+
+Requantization (Eq. 3):
+  INT(y) = clip_[0, 2^Ny)( floor( (kappa*phi + lambda) * eps_phi / eps_y ) )
+
+Two integer-exact realizations (both used by PULP-NN and reproduced here):
+  * ``y_bits in {2, 4}``  -> threshold ladder: INT(y) = sum_i [phi >= T_i]
+    (paper footnote 1: kappa/lambda folded into 2^N - 1 thresholds)
+  * ``y_bits == 8``       -> shift-and-clamp: INT(y) = clip((phi + bias) >> shift)
+    (paper Sec. 3: "simple shifts and clamps ... restore the output range")
+
+Thresholds / shift parameters are derived host-side in float64 (numpy) so the
+on-device path is pure int32 — exact, branch-free, and TPU-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantized tensor's integer grid."""
+
+    bits: int
+    signed: bool
+
+    def __post_init__(self):
+        if self.bits not in SUPPORTED_BITS:
+            raise ValueError(f"bits must be one of {SUPPORTED_BITS}, got {self.bits}")
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+    def scale_from_range(self, beta: float, alpha: float = 0.0) -> float:
+        """eps_t = (beta - alpha) / 2^N (paper Eq. 1). Symmetric signed uses
+        [-beta, beta) => eps = beta / 2^(N-1)."""
+        if self.signed:
+            return float(beta) / float(1 << (self.bits - 1))
+        return (float(beta) - float(alpha)) / float(self.levels)
+
+
+ACT_SPECS = {b: QuantSpec(b, signed=False) for b in SUPPORTED_BITS}
+WGT_SPECS = {b: QuantSpec(b, signed=True) for b in SUPPORTED_BITS}
+
+
+# ---------------------------------------------------------------------------
+# Basic quantize / dequantize (float <-> integer grid)
+# ---------------------------------------------------------------------------
+
+
+def storage_dtype(spec: QuantSpec):
+    """Unsigned tensors (acts/ofmaps, up to 255 at 8-bit) live in uint8;
+    signed weights in int8. Sub-byte tensors use the same dtypes packed."""
+    return jnp.int8 if spec.signed else jnp.uint8
+
+
+def quantize(t: jax.Array, scale: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Map real values onto the integer grid: round(t / eps), clipped."""
+    q = jnp.round(t / scale)
+    q = jnp.clip(q, spec.qmin, spec.qmax)
+    return q.astype(storage_dtype(spec))
+
+
+def dequantize(q: jax.Array, scale: jax.Array, spec: QuantSpec) -> jax.Array:
+    del spec  # alpha = 0 for acts; weights symmetric -> no zero point.
+    return q.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Requantization parameters (host-side, float64-exact -> pure int32 on device)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RequantParams:
+    """Folded (kappa, lambda, eps_phi, eps_y) for one layer, device-ready.
+
+    ``thresholds``: int32 [2^Ny - 1] ascending (sub-byte ladder path).
+    ``shift``/``bias``: 8-bit shift-and-clamp path; y = clip((phi + bias) >> shift).
+    Exactly one path is canonical per y_bits, but both are always derivable so
+    tests can cross-check them.
+    """
+
+    y_bits: int
+    thresholds: np.ndarray  # int32 [2^Ny - 1]
+    shift: int
+    bias: int
+    # Float view (for QAT / the float reference path):
+    mult: float  # kappa * eps_phi / eps_y
+    addend: float  # lambda * eps_phi / eps_y
+
+
+def make_requant_params(
+    *,
+    y_bits: int,
+    kappa: float = 1.0,
+    lam: float = 0.0,
+    eps_phi: float,
+    eps_y: float,
+    rounding: bool = False,
+) -> RequantParams:
+    """Fold Eq. 3 into device-ready integer parameters (host-side, float64)."""
+    if y_bits not in SUPPORTED_BITS:
+        raise ValueError(f"y_bits must be in {SUPPORTED_BITS}")
+    kappa = float(kappa)
+    lam = float(lam)
+    r = np.float64(eps_phi) / np.float64(eps_y)
+    mult = np.float64(kappa) * r
+    addend = np.float64(lam) * r
+    if mult <= 0:
+        raise ValueError("requant multiplier must be positive")
+
+    n_thresh = (1 << y_bits) - 1
+    # y >= i+1  <=>  (kappa*phi + lam) * r >= i+1  <=>  phi >= ((i+1)/r - lam)/kappa
+    # floor() semantics: smallest integer phi such that floor(...) >= i+1.
+    ks = np.arange(1, n_thresh + 1, dtype=np.float64)
+    raw = (ks / r - lam) / kappa
+    thresholds = np.ceil(raw - 1e-12).astype(np.int64)
+    thresholds = np.clip(thresholds, np.iinfo(np.int32).min, np.iinfo(np.int32).max)
+    thresholds = thresholds.astype(np.int32)
+
+    # Power-of-two approximation for the 8-bit shift path: mult ~= 2^-shift.
+    # PULP-NN faithful: the 8-bit path uses "simple shifts and clamps", i.e.
+    # the requant scale is snapped to a power of two at fold time.
+    shift = int(np.clip(np.round(-np.log2(mult)), 0, 31))
+    bias = int(np.round(addend * np.float64(1 << shift)))
+    if rounding and shift > 0:
+        bias += (1 << shift) // 2  # round-to-nearest instead of Eq. 3's floor
+    # arithmetic >> is floor division by 2^shift (exact, incl. negatives)
+    return RequantParams(
+        y_bits=y_bits,
+        thresholds=thresholds,
+        shift=shift,
+        bias=bias,
+        mult=float(mult),
+        addend=float(addend),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Device requantization paths (int32 in -> small uint out, stored int8)
+# ---------------------------------------------------------------------------
+
+
+def requant_ladder(phi: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Threshold-ladder requantization (paper's sub-byte path, vectorized).
+
+    The paper's binary-search if/else tree becomes a branch-free compare-sum:
+    INT(y) = sum_i [phi >= T_i]. 3 compares for 2-bit, 15 for 4-bit.
+    """
+    phi = phi.astype(jnp.int32)
+    t = thresholds.astype(jnp.int32)
+    y = jnp.zeros(phi.shape, jnp.int32)
+    # Unrolled over the (static, tiny) threshold count: VPU-friendly.
+    for i in range(t.shape[0]):
+        y = y + (phi >= t[i]).astype(jnp.int32)
+    return y.astype(jnp.uint8)
+
+
+def requant_shift(phi: jax.Array, shift: int, bias: int, y_bits: int) -> jax.Array:
+    """Shift-and-clamp requantization (paper's 8-bit path). Pure int32."""
+    phi = phi.astype(jnp.int32)
+    y = jnp.right_shift(phi + jnp.int32(bias), shift)
+    y = jnp.clip(y, 0, (1 << y_bits) - 1)
+    return y.astype(jnp.uint8)
+
+
+def requant_float(phi: jax.Array, mult: float, addend: float, y_bits: int) -> jax.Array:
+    """Float32 reference of Eq. 3 (used for QAT grids and tolerance checks)."""
+    y = jnp.floor(phi.astype(jnp.float32) * jnp.float32(mult) + jnp.float32(addend))
+    y = jnp.clip(y, 0, (1 << y_bits) - 1)
+    return y.astype(jnp.uint8)
+
+
+def requant(phi: jax.Array, params: RequantParams, *, ladder: Optional[bool] = None) -> jax.Array:
+    """Canonical dispatch: ladder for sub-byte, shift-and-clamp for 8-bit."""
+    use_ladder = (params.y_bits < 8) if ladder is None else ladder
+    if use_ladder:
+        return requant_ladder(phi, jnp.asarray(params.thresholds))
+    return requant_shift(phi, params.shift, params.bias, params.y_bits)
+
+
+# ---------------------------------------------------------------------------
+# Quantization-aware training (fake quant + STE; PACT-style learnable clip)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fake_quant_act(x: jax.Array, beta: jax.Array, bits: int, _tag: str = "act") -> jax.Array:
+    """PACT fake quantization for unsigned activations: clip to [0, beta),
+    snap to the 2^bits grid. Backward = STE inside the clip range; beta
+    receives the PACT gradient from the clipped region."""
+    spec = ACT_SPECS[bits]
+    beta = jnp.maximum(beta, 1e-5)
+    eps = beta / spec.levels
+    xc = jnp.clip(x, 0.0, beta - eps)  # top level maps to beta - eps (alpha=0 grid)
+    q = jnp.round(xc / eps)
+    return q * eps
+
+
+def _fq_act_fwd(x, beta, bits, _tag):
+    y = fake_quant_act(x, beta, bits, _tag)
+    return y, (x, beta)
+
+
+def _fq_act_bwd(bits, _tag, res, g):
+    x, beta = res
+    in_range = jnp.logical_and(x >= 0.0, x <= beta)
+    gx = jnp.where(in_range, g, 0.0)
+    # PACT: d/dbeta of clip(x, 0, beta) = 1 where x > beta.
+    gbeta = jnp.sum(jnp.where(x > beta, g, 0.0)).reshape(jnp.shape(beta))
+    return gx, gbeta.astype(jnp.asarray(beta).dtype)
+
+
+fake_quant_act.defvjp(_fq_act_fwd, _fq_act_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant_act_signed(x: jax.Array, beta: jax.Array, bits: int) -> jax.Array:
+    """Symmetric signed fake quantization for LM hidden states: clip to
+    [-beta, beta), snap to the 2^bits grid. STE + PACT-style beta gradient."""
+    half = 1 << (bits - 1)
+    beta = jnp.maximum(beta, 1e-5)
+    eps = beta / half
+    xc = jnp.clip(x, -beta, beta - eps)
+    return jnp.round(xc / eps) * eps
+
+
+def _fq_acts_fwd(x, beta, bits):
+    return fake_quant_act_signed(x, beta, bits), (x, beta)
+
+
+def _fq_acts_bwd(bits, res, g):
+    x, beta = res
+    in_range = jnp.abs(x) <= beta
+    gx = jnp.where(in_range, g, 0.0)
+    gbeta = jnp.sum(jnp.where(x > beta, g, 0.0) - jnp.where(x < -beta, g, 0.0))
+    return gx, gbeta.reshape(jnp.shape(beta)).astype(jnp.asarray(beta).dtype)
+
+
+fake_quant_act_signed.defvjp(_fq_acts_fwd, _fq_acts_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant_weight(w: jax.Array, bits: int) -> jax.Array:
+    """Symmetric signed fake quantization with per-tensor max scaling + STE."""
+    spec = WGT_SPECS[bits]
+    beta = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    eps = beta / (1 << (bits - 1))
+    q = jnp.clip(jnp.round(w / eps), spec.qmin, spec.qmax)
+    return q * eps
+
+
+def _fq_w_fwd(w, bits):
+    return fake_quant_weight(w, bits), None
+
+
+def _fq_w_bwd(bits, _res, g):
+    return (g,)  # straight-through
+
+
+fake_quant_weight.defvjp(_fq_w_fwd, _fq_w_bwd)
+
+
+# ---------------------------------------------------------------------------
+# True integer quantization of trained tensors (host- or device-side)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(w: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric integer weights. Returns (int8 values, eps scale)."""
+    spec = WGT_SPECS[bits]
+    beta = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    eps = beta / (1 << (bits - 1))
+    q = jnp.clip(jnp.round(w / eps), spec.qmin, spec.qmax).astype(jnp.int8)
+    return q, eps
+
+
+def quantize_act(x: jax.Array, beta: float | jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Unsigned activation quantization against a known clip range beta."""
+    spec = ACT_SPECS[bits]
+    eps = jnp.asarray(beta, jnp.float32) / spec.levels
+    q = jnp.clip(jnp.round(x / eps), spec.qmin, spec.qmax).astype(jnp.uint8)
+    return q, eps
+
+
+def quantize_act_signed(
+    x: jax.Array, beta: float | jax.Array, bits: int
+) -> tuple[jax.Array, jax.Array]:
+    """Signed activation quantization (LM hidden states), stored offset-binary
+    (q + 2^(b-1)) as uint8 so the packed layout matches the unsigned kernels
+    (the kernel subtracts the offset; DESIGN.md Sec. 5)."""
+    half = 1 << (bits - 1)
+    eps = jnp.asarray(beta, jnp.float32) / half
+    q = jnp.clip(jnp.round(x / eps), -half, half - 1)
+    return (q + half).astype(jnp.uint8), eps

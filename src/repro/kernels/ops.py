@@ -1,0 +1,184 @@
+"""Public, jit-friendly entry points for the mixed-precision kernels.
+
+Each op dispatches between:
+  * ``pallas``  — the Pallas TPU kernel (interpret=True on CPU; the TPU target),
+  * ``jnp``     — the identical integer arithmetic as plain XLA ops (bit-exact
+                  vs ref.py; used for CPU training/tests and dry-run lowering,
+                  since Pallas custom calls do not lower on the CPU backend).
+
+``impl="auto"`` picks ``pallas`` on TPU backends and ``jnp`` elsewhere, so the
+same model code runs in every environment (DESIGN.md Sec. 6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pack as P
+from repro.core import quant as Q
+from repro.kernels import ref
+from repro.kernels.conv2d import conv2d_pallas
+from repro.kernels.mpmm import mpmm_pallas, requant_vector
+from repro.kernels.qntpack import qntpack_pallas
+
+Impl = Literal["auto", "pallas", "jnp"]
+
+
+def _resolve(impl: Impl) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(a: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = a.shape[axis]
+    pad = -size % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def mpmm(
+    x_p: jax.Array,  # (M, K/rx) packed unsigned ifmaps
+    w_p: jax.Array,  # (N, K/rw) packed signed weights
+    rq: Q.RequantParams,
+    *,
+    x_bits: int,
+    w_bits: int,
+    y_bits: int,
+    x_signed: bool = False,
+    out_kind: str = "packed",
+    out_scale: float | jax.Array = 1.0,
+    impl: Impl = "auto",
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jax.Array:
+    """The paper's MatMul + fused QntPack over any of the 27 permutations."""
+    if rq is None:
+        rq = Q.make_requant_params(y_bits=y_bits, eps_phi=2**-8, eps_y=1.0)
+    if _resolve(impl) == "jnp":
+        return ref.mpmm_ref(
+            x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
+            x_signed=x_signed, out_kind=out_kind, out_scale=out_scale,
+        )
+    rx, rw, ry = P.pack_ratio(x_bits), P.pack_ratio(w_bits), P.pack_ratio(y_bits)
+    M, N, K = x_p.shape[0], w_p.shape[0], x_p.shape[1] * rx
+    bm_, bn_, bk_ = min(bm, _ceil(M, 8)), min(bn, _ceil(N, 128)), min(bk, _ceil(K, 128))
+    xp = _pad_axis(_pad_axis(x_p, 0, bm_), 1, bk_ // rx)
+    wp = _pad_axis(_pad_axis(w_p, 0, bn_), 1, bk_ // rw)
+    rqv = requant_vector(rq)
+    scale = jnp.asarray(out_scale, jnp.float32).reshape(1)
+    y = mpmm_pallas(
+        xp, wp, rqv, scale,
+        x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, x_signed=x_signed,
+        out_kind=out_kind, bm=bm_, bn=bn_, bk=bk_, interpret=_interpret(),
+    )
+    if out_kind == "packed":
+        return y[:M, : N // ry]
+    return y[:M, :N]
+
+
+def _ceil(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+def qntpack(
+    phi: jax.Array,
+    rq: Q.RequantParams,
+    *,
+    y_bits: int,
+    impl: Impl = "auto",
+    bm: int = 256,
+) -> jax.Array:
+    if _resolve(impl) == "jnp":
+        return ref.qntpack_ref(phi, rq, y_bits=y_bits)
+    M, N = phi.shape
+    bm_ = min(bm, _ceil(M, 8))
+    ry = P.pack_ratio(y_bits)
+    phip = _pad_axis(phi, 0, bm_)
+    y = qntpack_pallas(phip, requant_vector(rq), y_bits=y_bits, bm=bm_,
+                       interpret=_interpret())
+    return y[:M, : N // ry]
+
+
+def conv2d(
+    x_p: jax.Array,  # (H, W, C/rx) packed HWC ifmap (un-padded)
+    w_p: jax.Array,  # (Cout, 9*C/rw) packed weights
+    rq: Q.RequantParams,
+    *,
+    x_bits: int,
+    w_bits: int,
+    y_bits: int,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """3x3/s1/p1 HWC conv (the paper's Reference Layer shape family)."""
+    if _resolve(impl) == "jnp":
+        return ref.conv2d_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits)
+    x_pad = jnp.pad(x_p, ((1, 1), (1, 1), (0, 0)))  # quantized zero == 0.0
+    return conv2d_pallas(
+        x_pad, w_p, requant_vector(rq),
+        x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, interpret=_interpret(),
+    )
+
+
+def wdqmm(
+    x: jax.Array,  # (M, K) bf16/f32 activations
+    w_p: jax.Array,  # (N, K/r) packed signed weights
+    eps_w: jax.Array,
+    *,
+    w_bits: int,
+    impl: Impl = "auto",
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jax.Array:
+    """Weight-only dequant matmul (decode GEMV path)."""
+    from repro.kernels.wdqmm import wdqmm_pallas, wdqmm_ref
+
+    if _resolve(impl) == "jnp":
+        return wdqmm_ref(x, w_p, jnp.asarray(eps_w, jnp.float32), w_bits=w_bits)
+    rw = P.pack_ratio(w_bits)
+    M, K = x.shape
+    N = w_p.shape[0]
+    bm_, bn_, bk_ = min(bm, _ceil(M, 8)), min(bn, _ceil(N, 128)), min(bk, _ceil(K, 128))
+    xp = _pad_axis(_pad_axis(x, 0, bm_), 1, bk_)
+    wp = _pad_axis(_pad_axis(w_p, 0, bn_), 1, bk_ // rw)
+    y = wdqmm_pallas(xp, wp, jnp.asarray(eps_w, jnp.float32).reshape(1),
+                     w_bits=w_bits, bm=bm_, bn=bn_, bk=bk_,
+                     interpret=_interpret())
+    return y[:M, :N]
+
+
+# ------------------------------------------------------- quantize-and-pack IO
+
+
+def quantize_pack_act(x: jax.Array, beta, bits: int) -> tuple[jax.Array, jax.Array]:
+    """float -> packed unsigned activations + eps scale."""
+    q, eps = Q.quantize_act(x, beta, bits)
+    return P.pack(q, bits), eps
+
+
+def quantize_pack_weight(w: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """float (N, K) -> packed signed weights + eps scale."""
+    q, eps = Q.quantize_weight(w, bits)
+    return P.pack(q, bits), eps
+
+
+def make_rq(
+    *, y_bits: int, eps_phi: float, eps_y: float, kappa: float = 1.0, lam: float = 0.0
+) -> Q.RequantParams:
+    return Q.make_requant_params(
+        y_bits=y_bits, kappa=kappa, lam=lam, eps_phi=eps_phi, eps_y=eps_y
+    )

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every kernel. Bit-exact ground truth.
+
+The oracles compute the paper's arithmetic in the most literal way possible:
+unpack everything to integer values, accumulate in int32 (phi), requantize per
+Eq. 3, pack. No offset-binary tricks, no blocking — maximum clarity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack as P
+from repro.core import quant as Q
+
+
+def _rq(phi: jax.Array, rq: Q.RequantParams) -> jax.Array:
+    return Q.requant(phi, rq)
+
+
+def mpmm_ref(
+    x_p: jax.Array,  # (M, K/rx) packed unsigned ifmaps (int8 bit patterns)
+    w_p: jax.Array,  # (N, K/rw) packed signed weights
+    rq: Q.RequantParams,
+    *,
+    x_bits: int,
+    w_bits: int,
+    y_bits: int,
+    x_signed: bool = False,
+    out_kind: str = "packed",  # "packed" | "int32" | "f32"
+    out_scale: float | jax.Array = 1.0,  # eps_x * eps_w, for out_kind == "f32"
+) -> jax.Array:
+    """Mixed-precision matmul oracle: y[m, n] = requant(sum_k w[n,k] x[m,k]).
+
+    ``x_signed``: ifmaps were stored offset-binary (q + 2^(b-1)); the oracle
+    recovers the signed values before accumulating (LM hidden-state variant).
+    """
+    x = P.unpack(x_p, x_bits, signed=False).astype(jnp.int32)  # (M, K)
+    if x_signed:
+        x = x - (1 << (x_bits - 1))
+    w = P.unpack(w_p, w_bits, signed=True).astype(jnp.int32)  # (N, K)
+    phi = jax.lax.dot_general(
+        x, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )  # (M, N)
+    if out_kind == "int32":
+        return phi
+    if out_kind == "f32":
+        return phi.astype(jnp.float32) * jnp.asarray(out_scale, jnp.float32)
+    y = _rq(phi, rq)  # (M, N) uint8 values in [0, 2^y_bits)
+    return P.pack(y, y_bits)
+
+
+def qntpack_ref(phi: jax.Array, rq: Q.RequantParams, *, y_bits: int) -> jax.Array:
+    """Standalone QntPack oracle: requantize int32 -> pack along last axis."""
+    return P.pack(_rq(phi, rq), y_bits)
+
+
+def conv2d_ref(
+    x_p: jax.Array,  # (H, W, C/rx) packed unsigned HWC ifmap
+    w_p: jax.Array,  # (Cout, 3*3*C/rw) packed signed weights, (dy, dx, c) order
+    rq: Q.RequantParams,
+    *,
+    x_bits: int,
+    w_bits: int,
+    y_bits: int,
+) -> jax.Array:
+    """Paper Reference-Layer conv oracle: 3x3, stride 1, zero pad 1, HWC.
+
+    im2col -> MatMul -> QntPack, exactly the paper's three phases.
+    """
+    H, W, _ = x_p.shape
+    x = P.unpack(x_p, x_bits, signed=False).astype(jnp.int32)  # (H, W, C)
+    C = x.shape[-1]
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))  # INT 0 == real 0.0 (alpha = 0)
+    # im2col: (H, W, 3, 3, C)
+    cols = jnp.stack(
+        [
+            jnp.stack([xp[dy : dy + H, dx : dx + W, :] for dx in range(3)], axis=2)
+            for dy in range(3)
+        ],
+        axis=2,
+    )
+    cols = cols.reshape(H * W, 9 * C)
+    w = P.unpack(w_p, w_bits, signed=True).astype(jnp.int32)  # (Cout, 9C)
+    phi = jax.lax.dot_general(
+        cols, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )  # (H*W, Cout)
+    y = _rq(phi, rq)
+    return P.pack(y, y_bits).reshape(H, W, -1)

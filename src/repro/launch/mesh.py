@@ -1,0 +1,221 @@
+"""Production mesh + sharding rules (DP / TP / EP / SP / FSDP).
+
+Mesh (per assignment): single-pod (data=16, model=16) = 256 chips;
+multi-pod (pod=2, data=16, model=16) = 512 chips. ``pod`` is pure data
+parallelism — the gradient all-reduce (optionally int8-compressed) is the
+only cross-pod traffic.
+
+Rules (DESIGN.md Sec. 7):
+  * column-parallel (d_out on ``model``): q/k/v, ffn up/gate, embed, head,
+    MLA down/up, SSM in-proj, rwkv r/k/v/g;
+  * row-parallel (d_in on ``model``): attn out, ffn down, SSM out-proj;
+  * experts (E on ``model``): EP — dispatch all_to_alls cross the model axis;
+  * batch on (pod, data); long_500k (batch=1) shards the KV-cache/state
+    SEQUENCE on ``data`` (SP, flash-decode style) instead;
+  * fsdp=True additionally shards the non-TP weight dim over (pod, data) —
+    ZeRO-3; optimizer state follows parameters.
+Non-divisible dims (20 heads / 16 shards, 51865 vocab) rely on GSPMD's
+implicit padding — correct, slightly wasteful, and visible in the roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeCfg
+from repro.core.policy import PrecisionPolicy
+from repro.models.model import ArchConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """(16, 16) 'data','model' or (2, 16, 16) 'pod','data','model'.
+
+    A FUNCTION, not a module constant: importing this module never touches
+    jax device state. Uses the first prod(shape) devices so the single-pod
+    mesh also builds in a 512-device dry-run environment.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(devices, axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    mesh: Mesh
+    fsdp: bool = False
+    # 2D expert sharding: E over (model x data) — one expert per chip at
+    # E=256. Tokens route to resident weights (small all-to-all) instead of
+    # ZeRO-3 gathering every expert's weights per step (Perf iteration B2).
+    ep2d: bool = False
+
+    @property
+    def dp(self):  # data-parallel axes (batch / fsdp dim)
+        return ("pod", "data") if "pod" in self.mesh.axis_names else ("data",)
+
+    @property
+    def tp(self) -> str:
+        return "model"
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+    @property
+    def tp_size(self) -> int:
+        return int(self.mesh.shape[self.tp])
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+COL_PARALLEL = {
+    "wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b", "up", "gate",
+    "ck", "cr", "wr", "wg", "in_proj", "head", "patch_proj", "mtp_proj",
+}
+ROW_PARALLEL = {"wo", "down", "cv", "out_proj"}
+REPLICATED_LINEARS = {"router"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+    return names
+
+
+def _weight_spec(parent: str, ndim: int, env: AxisEnv) -> P:
+    """Spec for a 'w'/'w_packed' leaf. ndim: 2 plain, 3 scan-stacked,
+    4 scan-stacked experts (L, E, d_out, d_in)."""
+    tp = env.tp
+    dp = env.dp if env.fsdp else None
+    if parent in REPLICATED_LINEARS:
+        base = (None, None)
+    elif parent in ROW_PARALLEL:
+        base = (dp, tp)
+    else:  # column-parallel default (incl. COL_PARALLEL)
+        base = (tp, dp)
+    if ndim == 2:
+        return P(*base)
+    if ndim == 3:
+        return P(None, *base)  # scan-stacked
+    if ndim == 4:
+        if env.ep2d:  # experts across the whole mesh (weights never move)
+            return P(None, (env.tp,) + (env.dp if isinstance(env.dp, tuple)
+                                        else (env.dp,)), None, None)
+        return P(None, tp, dp, None)  # experts: E on model (EP)
+    return P()
+
+
+def _divisibility_fallback(spec: P, shape, env: AxisEnv) -> P:
+    """Argument shardings must divide exactly: drop (replicate) any axis
+    whose dim is not a multiple of the assigned mesh axes' product."""
+    fixed = []
+    for i, entry in enumerate(tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            fixed.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = int(np.prod([env.mesh.shape[a] for a in axes]))
+        fixed.append(entry if shape[i] % size == 0 else None)
+    return P(*fixed)
+
+
+def param_specs(params: Any, env: AxisEnv, *, fsdp: Any = None) -> Any:
+    """PartitionSpec tree matching a params/opt-state pytree.
+
+    ``fsdp`` overrides env.fsdp — ZeRO-2 shards the optimizer moments on the
+    dp axes (param_specs(opt, env, fsdp=True)) while parameters stay TP-only
+    (fsdp=False): GSPMD otherwise falls into replicated compute when the
+    data axis shards both the batch and a weight dim (measured 4.9x FLOP
+    inflation; EXPERIMENTS.md Perf iteration 1)."""
+    use = dataclasses.replace(env, fsdp=env.fsdp if fsdp is None else fsdp)
+
+    def spec(path, leaf) -> P:
+        names = _path_names(path)
+        last = names[-1]
+        if last in ("w", "w_packed"):
+            parent = names[-2] if len(names) >= 2 else ""
+            s = _weight_spec(parent, leaf.ndim, use)
+        elif last == "table":  # embedding (V, d) or stacked
+            base = (use.tp, use.dp if use.fsdp else None)
+            s = P(*(((None,) * (leaf.ndim - 2)) + base))
+        else:
+            s = P()  # norms, biases, scales, scalars, tiny LoRAs
+        return _divisibility_fallback(s, leaf.shape, env)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg, env: AxisEnv) -> dict:
+    dp = env.dp
+    shardable = shape.global_batch % env.dp_size == 0
+    bspec = dp if shardable else None
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            return {"frames": P(bspec, None, None), "tokens": P(bspec, None)}
+        out = {"tokens": P(bspec, None)}
+        if cfg.family == "vlm":
+            out["patches"] = P(bspec, None, None)
+            out["positions"] = P(None, bspec, None)
+        return out
+    return {"tokens": P(bspec, None), "pos": P()}
+
+
+def cache_specs(cache_tree: Any, cfg: ArchConfig, shape: ShapeCfg,
+                env: AxisEnv) -> Any:
+    """Sharding for the decode cache (leaves stacked (L, B, S, H, D) etc.).
+
+    batch shardable  -> batch on dp; heads on model if divisible, else the
+                        SEQUENCE dim goes on model (flash-decode TP).
+    batch unshardable (long_500k) -> sequence on data (SP) + heads on model.
+    """
+    tp, dp = env.tp, env.dp
+    b_ok = shape.global_batch % env.dp_size == 0
+    kv_ok = cfg.kv_heads % env.tp_size == 0
+
+    def spec(path, leaf) -> P:
+        names = _path_names(path)
+        last = names[-1]
+        nd = leaf.ndim
+        if last in ("k", "v", "c", "r"):  # (L, B, S, H, D[/r])
+            if b_ok:
+                return P(None, dp, None, tp, None) if kv_ok and last in ("k", "v") \
+                    else P(None, dp, tp, None, None)
+            return P(None, None, dp, tp if kv_ok and last in ("k", "v") else None, None)
+        if last in ("k_s", "v_s", "c_s"):  # (L, B, S, H)
+            if b_ok:
+                return P(None, dp, None, tp) if kv_ok and last != "c_s" \
+                    else P(None, dp, tp, None)
+            return P(None, None, dp, tp if kv_ok and last != "c_s" else None)
+        if last in ("ssm", "wkv"):  # (L, B, H, dk, dv)
+            h = leaf.shape[2]
+            htp = tp if h % env.tp_size == 0 else None
+            return P(None, dp if b_ok else None, htp, None, None)
+        if last in ("conv", "x_att", "x_ffn"):
+            return P(*( (None, dp if b_ok else None) + (None,) * (nd - 2)))
+        if last in ("[0]", "[1]"):  # whisper cross K/V tuple (L, B, S, H, D)
+            return P(None, dp if b_ok else None, None, None, None)
+        return P()
+
+    def checked(path, leaf):
+        return _divisibility_fallback(spec(path, leaf), leaf.shape, env)
+
+    return jax.tree_util.tree_map_with_path(checked, cache_tree)
+
+
+def tree_shardings(spec_tree: Any, env: AxisEnv) -> Any:
+    return jax.tree.map(
+        lambda s: env.named(s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

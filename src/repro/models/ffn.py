@@ -1,0 +1,206 @@
+"""Feed-forward stack: (gated) MLP and Mixture-of-Experts with sort-based
+capacity dispatch (expert-parallel over the mesh ``model`` axis).
+
+The MoE dispatch is dense-XLA only (sort + searchsorted + scatter/gather):
+O(T * k) memory, no (T, E, C) one-hot tensors, GSPMD-shardable — the scatter
+to the expert-sharded buffer lowers to all-to-all style collectives.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import (
+    experts_apply,
+    experts_init,
+    linear_apply,
+    linear_init,
+)
+from repro.core.policy import PrecisionPolicy
+from repro.kernels import ops
+from repro.models.common import act_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPCfg:
+    d_model: int
+    d_ff: int
+    act: str = "silu"
+    gated: bool = True  # SwiGLU-family; False -> up/act/down (whisper GELU)
+
+
+def mlp_init(key: jax.Array, cfg: MLPCfg, policy: PrecisionPolicy, *,
+             mode: str = "train", dtype=jnp.float32) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    lp_in, lp_out = policy.of("ffn_in"), policy.of("ffn_out")
+    p = {
+        "up": linear_init(ku, cfg.d_model, cfg.d_ff, lp_in, mode=mode, dtype=dtype),
+        "down": linear_init(kd, cfg.d_ff, cfg.d_model, lp_out, mode=mode, dtype=dtype),
+    }
+    if cfg.gated:
+        p["gate"] = linear_init(kg, cfg.d_model, cfg.d_ff, lp_in, mode=mode, dtype=dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, cfg: MLPCfg, policy: PrecisionPolicy, *,
+              mode: str = "train", impl: ops.Impl = "auto") -> jax.Array:
+    lp_in, lp_out = policy.of("ffn_in"), policy.of("ffn_out")
+    up = linear_apply(params["up"], x, lp_in, mode=mode, impl=impl)
+    f = act_fn(cfg.act)
+    if cfg.gated:
+        gate = linear_apply(params["gate"], x, lp_in, mode=mode, impl=impl)
+        h = f(gate) * up
+    else:
+        h = f(up)
+    return linear_apply(params["down"], h, lp_out, mode=mode, impl=impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0  # deepseek-v3: 1 shared expert
+    d_ff_shared: int = 0
+    act: str = "silu"
+    capacity_factor: float = 1.25
+    router_bias_balance: bool = True  # aux-loss-free bias (deepseek-style)
+
+
+def moe_init(key: jax.Array, cfg: MoECfg, policy: PrecisionPolicy, *,
+             mode: str = "train", dtype=jnp.float32) -> dict:
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    lp_e = policy.of("expert")
+    p = {
+        "router": linear_init(kr, cfg.d_model, cfg.n_experts, policy.of("router"),
+                              mode=mode, dtype=dtype),
+        "gate": experts_init(kg, cfg.n_experts, cfg.d_model, cfg.d_ff_expert, lp_e,
+                             mode=mode, dtype=dtype),
+        "up": experts_init(ku, cfg.n_experts, cfg.d_model, cfg.d_ff_expert, lp_e,
+                           mode=mode, dtype=dtype),
+        "down": experts_init(kd, cfg.n_experts, cfg.d_ff_expert, cfg.d_model, lp_e,
+                             mode=mode, dtype=dtype),
+    }
+    if cfg.router_bias_balance:
+        p["router_bias"] = jnp.zeros((cfg.n_experts,), jnp.float32)
+    if cfg.n_shared:
+        p["shared"] = mlp_init(
+            ks, MLPCfg(cfg.d_model, cfg.d_ff_shared or cfg.d_ff_expert, cfg.act),
+            policy, mode=mode, dtype=dtype)
+    return p
+
+
+def moe_capacity(n_tokens: int, cfg: MoECfg) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, -(-c // 4) * 4)  # multiple of 4
+
+
+def _dispatch_groups(flat: int, pref: int = 32) -> int:
+    """Largest power-of-two group count <= pref dividing the flat length.
+
+    Adaptive: small flat lengths (decode) use ONE group — a global sort of
+    ~1k elements partitions fine, and per-group capacity padding otherwise
+    overprovisions the dispatch buffers ~32x (Perf iteration, deepseek
+    decode). Grouping exists to keep the sort shard-local at ~1M lengths.
+    """
+    if flat <= 8192:
+        return 1
+    g = 1
+    while g < pref and flat % (2 * g) == 0 and flat // (2 * g) >= 4:
+        g *= 2
+    return g
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: MoECfg, policy: PrecisionPolicy, *,
+              mode: str = "train", impl: ops.Impl = "auto"):
+    """x (B, S, d) -> (y, aux_loss). Sort-based capacity dispatch."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    k, E = cfg.top_k, cfg.n_experts
+    C = moe_capacity(T, cfg)
+
+    logits = linear_apply(params["router"], xt, policy.of("router"),
+                          mode=mode, impl=impl).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    sel = probs
+    if cfg.router_bias_balance and "router_bias" in params:
+        sel = probs + jax.lax.stop_gradient(params["router_bias"])
+    top_sel, top_i = jax.lax.top_k(sel, k)  # (T, k)
+    top_p = jnp.take_along_axis(probs, top_i, axis=-1)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    assign = jnp.zeros((T, E), jnp.float32)
+    assign = assign.at[jnp.arange(T)[:, None], top_i].set(1.0)
+    f_e = assign.mean(0)
+    P_e = probs.mean(0)
+    aux = E * jnp.sum(f_e * P_e)
+
+    # ---- grouped sort-based dispatch ----
+    # The sort runs along the LAST axis of (G, T*k/G): with tokens sharded
+    # over the data axis, every group's sort is shard-local — GSPMD
+    # partitions a batched sort trivially, vs. a global argsort which lowers
+    # to a cross-device sort/merge network (compile- and comm-prohibitive at
+    # T ~ 1M). Capacity is per (group, expert); experts see (E, G*Cg, d).
+    Tk = T * k
+    G = _dispatch_groups(Tk)
+    Cg = max(4, -(-(-(-C // G)) // 4) * 4)  # ceil(C/G) rounded up to 4
+    flat_e = top_i.reshape(G, Tk // G)
+    flat_p = top_p.reshape(G, Tk // G)
+    flat_t = jnp.repeat(jnp.arange(T), k).reshape(G, Tk // G)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    se = jnp.take_along_axis(flat_e, order, axis=-1)
+    sp = jnp.take_along_axis(flat_p, order, axis=-1)
+    stt = jnp.take_along_axis(flat_t, order, axis=-1)
+    first = jax.vmap(lambda row: jnp.searchsorted(row, row, side="left"))(se)
+    pos = jnp.arange(Tk // G)[None, :] - first  # rank within (group, expert)
+    keep = pos < Cg
+    g_idx = jnp.arange(G)[:, None]
+    dest = jnp.where(keep, se * (G * Cg) + g_idx * Cg + pos, E * G * Cg)
+
+    # optional int8 dispatch payloads (the paper's quantization applied to
+    # the EP all-to-all: 2x wire bytes vs bf16; per-token symmetric scales)
+    from repro import runtime_flags as RF
+
+    dq_bits = RF.FLAGS.get("moe_dispatch_bits")
+    src = xt[stt.reshape(-1)]
+    if dq_bits == 8 and mode == "serve":
+        amax = jnp.max(jnp.abs(src.astype(jnp.float32)), axis=-1, keepdims=True)
+        scl = jnp.maximum(amax, 1e-6) / 127.0
+        src_q = jnp.clip(jnp.round(src / scl), -127, 127).astype(jnp.int8)
+        buf_q = jnp.zeros((E * G * Cg, d), jnp.int8)
+        buf_q = buf_q.at[dest.reshape(-1)].set(src_q, mode="drop")
+        buf_s = jnp.zeros((E * G * Cg, 1), jnp.float32)
+        buf_s = buf_s.at[dest.reshape(-1)].set(scl, mode="drop")
+        buf = (buf_q.astype(jnp.float32) * buf_s).astype(x.dtype)
+    else:
+        buf = jnp.zeros((E * G * Cg, d), x.dtype)
+        buf = buf.at[dest.reshape(-1)].set(src, mode="drop")
+    buf = buf.reshape(E, G * Cg, d)
+
+    lp_e = policy.of("expert")
+    f = act_fn(cfg.act)
+    g = experts_apply(params["gate"], buf, lp_e, mode=mode, impl=impl)
+    u = experts_apply(params["up"], buf, lp_e, mode=mode, impl=impl)
+    h = (f(g) * u).astype(x.dtype)
+    o = experts_apply(params["down"], h, lp_e, mode=mode, impl=impl)  # (E, G*Cg, d)
+
+    out_flat = o.reshape(E * G * Cg, d)
+    dflat, kflat = dest.reshape(-1), keep.reshape(-1)
+    contrib = jnp.where(
+        kflat[:, None], out_flat[jnp.minimum(dflat, E * G * Cg - 1)], 0.0
+    ) * sp.reshape(-1)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[stt.reshape(-1)].add(contrib)
+
+    if "shared" in params:
+        y = y + mlp_apply(
+            params["shared"], xt,
+            MLPCfg(cfg.d_model, cfg.d_ff_shared or cfg.d_ff_expert, cfg.act),
+            policy, mode=mode, impl=impl)
+    return y.reshape(B, S, d), aux

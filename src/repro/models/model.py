@@ -1,0 +1,556 @@
+"""Architecture assembly: one ArchConfig -> init / forward / decode for all
+assigned families (dense, moe, mla_moe, hybrid, rwkv, encdec, vlm).
+
+Homogeneous layer stacks are SCAN-STACKED (params stacked on a leading L axis,
+jax.lax.scan over layers) so HLO size and compile time stay flat in depth —
+essential for the 61-layer/512-device dry-runs on this CPU container, and
+standard practice at production scale (MaxText-style).
+
+Every projection routes through core.linear.QuantizedLinear under the active
+PrecisionPolicy — the paper's mixed-precision permutation space applied
+network-wide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime_flags as RF
+from repro.core.policy import PrecisionPolicy
+from repro.kernels import ops
+from repro.models import ssm
+from repro.models.attention import (
+    AttnCfg,
+    MLACfg,
+    attn_apply,
+    attn_init,
+    cache_init,
+    mla_apply,
+    mla_cache_init,
+    mla_init,
+)
+from repro.models.common import NORMS, embed_apply, embed_init
+from repro.models.ffn import MLPCfg, MoECfg, mlp_apply, mlp_init, moe_apply, moe_init
+from repro.core.linear import linear_apply, linear_init
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | mla_moe | hybrid | rwkv | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model / n_heads
+    qkv_bias: bool = False
+    window: Optional[int] = None  # SWA
+    norm: str = "rms"
+    act: str = "silu"
+    rope_theta: float = 10_000.0
+    rope_pct: float = 1.0  # stablelm: 0.25
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared: int = 0
+    shared_d_ff: int = 0
+    dense_layers: int = 0  # deepseek-v3: first 3 layers dense
+    # mla (deepseek)
+    mla: bool = False
+    q_lora: int = 1536
+    kv_lora: int = 512
+    d_nope: int = 128
+    d_rope: int = 64
+    d_v: int = 128
+    mtp: bool = False
+    # hybrid (zamba2)
+    attn_every: int = 0
+    ssm_state: int = 0
+    # vlm (qwen2-vl)
+    mrope_sections: Optional[tuple[int, int, int]] = None
+    n_patches: int = 0
+    # encdec (whisper)
+    enc_layers: int = 0
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch serve 500k contexts? (DESIGN.md Sec. 8 skip rule)"""
+        return self.family in ("hybrid", "rwkv") or self.window is not None
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded to 256 so embeddings/head shard on any mesh axis
+        (argument shardings require exact divisibility; MaxText-style pad)."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def attn_cfg(self) -> AttnCfg:
+        return AttnCfg(
+            d_model=self.d_model, n_heads=self.n_heads, kv_heads=self.kv_heads,
+            head_dim=self.head_dim, qkv_bias=self.qkv_bias, window=self.window,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections,
+        )
+
+    @property
+    def mla_cfg(self) -> MLACfg:
+        return MLACfg(d_model=self.d_model, n_heads=self.n_heads,
+                      q_lora=self.q_lora, kv_lora=self.kv_lora,
+                      d_nope=self.d_nope, d_rope=self.d_rope, d_v=self.d_v,
+                      rope_theta=self.rope_theta)
+
+    @property
+    def mlp_cfg(self) -> MLPCfg:
+        gated = self.act != "gelu"
+        return MLPCfg(self.d_model, self.d_ff, self.act, gated=gated)
+
+    @property
+    def moe_cfg(self) -> MoECfg:
+        return MoECfg(
+            d_model=self.d_model, n_experts=self.n_experts, top_k=self.top_k,
+            d_ff_expert=self.moe_d_ff or self.d_ff, n_shared=self.n_shared,
+            d_ff_shared=self.shared_d_ff, act=self.act,
+        )
+
+    @property
+    def mamba_cfg(self) -> ssm.Mamba2Cfg:
+        return ssm.Mamba2Cfg(d_model=self.d_model, d_state=self.ssm_state or 64)
+
+    @property
+    def rwkv_cfg(self) -> ssm.RWKV6Cfg:
+        return ssm.RWKV6Cfg(d_model=self.d_model, d_ff=self.d_ff)
+
+
+# --------------------------------------------------------------- block defs
+
+
+def _norm_fns(cfg: ArchConfig):
+    return NORMS[cfg.norm]
+
+
+def _block_init(key, cfg: ArchConfig, policy, mode, dtype, *, kind: str) -> dict:
+    """One transformer block of the given kind."""
+    ninit, _ = _norm_fns(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict = {"norm1": ninit(cfg.d_model), "norm2": ninit(cfg.d_model)}
+    if kind in ("dense", "moe"):
+        p["attn"] = attn_init(k1, cfg.attn_cfg, policy, mode=mode, dtype=dtype)
+        if kind == "dense":
+            p["mlp"] = mlp_init(k2, cfg.mlp_cfg, policy, mode=mode, dtype=dtype)
+        else:
+            p["moe"] = moe_init(k2, cfg.moe_cfg, policy, mode=mode, dtype=dtype)
+    elif kind == "mla_dense":
+        p["attn"] = mla_init(k1, cfg.mla_cfg, policy, mode=mode, dtype=dtype)
+        p["mlp"] = mlp_init(
+            k2, MLPCfg(cfg.d_model, cfg.d_ff * 9, cfg.act), policy, mode=mode,
+            dtype=dtype)  # deepseek dense layers: d_ff 18432 = 9 * 2048
+    elif kind == "mla_moe":
+        p["attn"] = mla_init(k1, cfg.mla_cfg, policy, mode=mode, dtype=dtype)
+        p["moe"] = moe_init(k2, cfg.moe_cfg, policy, mode=mode, dtype=dtype)
+    elif kind == "mamba":
+        p = {"norm1": ninit(cfg.d_model)}
+        p["mixer"] = ssm.mamba2_init(k1, cfg.mamba_cfg, policy, mode=mode, dtype=dtype)
+    elif kind == "rwkv":
+        p["att"] = ssm.rwkv6_init(k1, cfg.rwkv_cfg, policy, mode=mode, dtype=dtype)
+    elif kind == "enc":
+        p["attn"] = attn_init(k1, cfg.attn_cfg, policy, mode=mode, dtype=dtype)
+        p["mlp"] = mlp_init(k2, cfg.mlp_cfg, policy, mode=mode, dtype=dtype)
+    elif kind == "dec":
+        p["attn"] = attn_init(k1, cfg.attn_cfg, policy, mode=mode, dtype=dtype)
+        p["cross"] = attn_init(k2, cfg.attn_cfg, policy, mode=mode, dtype=dtype)
+        p["norm3"] = ninit(cfg.d_model)
+        p["mlp"] = mlp_init(k3, cfg.mlp_cfg, policy, mode=mode, dtype=dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
+                 cache=None, cache_pos=None, cross_kv=None, causal=True):
+    """Returns (x_out, new_cache, aux)."""
+    _, nfn = _norm_fns(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("dense", "moe", "mla_dense", "mla_moe", "enc", "dec"):
+        h = nfn(params["norm1"], x)
+        if kind.startswith("mla"):
+            a, new_cache = mla_apply(params["attn"], h, pos, cfg.mla_cfg, policy,
+                                     mode=mode, impl=impl, cache=cache,
+                                     cache_pos=cache_pos)
+        else:
+            sc = None if cache is None else cache.get("self")
+            a, sc_new = attn_apply(params["attn"], h, pos, cfg.attn_cfg, policy,
+                                   mode=mode, impl=impl, causal=causal,
+                                   cache=sc, cache_pos=cache_pos)
+            new_cache = cache if cache is None else dict(cache, self=sc_new)
+        x = x + a
+        if kind == "dec":
+            h = nfn(params["norm3"], x)
+            ckv = cross_kv if cross_kv is not None else cache["cross"]
+            c, _ = attn_apply(params["cross"], h, pos, cfg.attn_cfg, policy,
+                              mode=mode, impl=impl, causal=False,
+                              kv_override=ckv)
+            x = x + c
+        h = nfn(params["norm2"], x)
+        if kind in ("moe", "mla_moe"):
+            m, aux = moe_apply(params["moe"], h, cfg.moe_cfg, policy, mode=mode, impl=impl)
+        elif kind == "mla_dense":
+            m = mlp_apply(params["mlp"], h,
+                          MLPCfg(cfg.d_model, cfg.d_ff * 9, cfg.act), policy,
+                          mode=mode, impl=impl)
+        else:
+            m = mlp_apply(params["mlp"], h, cfg.mlp_cfg, policy, mode=mode, impl=impl)
+        return x + m, new_cache, aux
+    if kind == "mamba":
+        h = nfn(params["norm1"], x)
+        m, new_state = ssm.mamba2_apply(params["mixer"], h, cfg.mamba_cfg, policy,
+                                        mode=mode, impl=impl, state=cache)
+        return x + m, new_state, aux
+    if kind == "rwkv":
+        h = nfn(params["norm1"], x)
+        a, st_att = ssm.rwkv6_time_mix(params["att"], h, cfg.rwkv_cfg, policy,
+                                       mode=mode, impl=impl,
+                                       state=cache)
+        x = x + a
+        h = nfn(params["norm2"], x)
+        m, st_ffn = ssm.rwkv6_channel_mix(params["att"], h, cfg.rwkv_cfg, policy,
+                                          mode=mode, impl=impl, state=cache)
+        new_state = None
+        if cache is not None or mode == "serve":
+            new_state = {**st_att, **st_ffn}
+        return x + m, new_state, aux
+    raise ValueError(kind)
+
+
+def _layer_kinds(cfg: ArchConfig) -> list[str]:
+    """Per-layer block kind for the main (decoder) stack."""
+    if cfg.family == "dense" or cfg.family == "vlm":
+        return ["dense"] * cfg.n_layers
+    if cfg.family == "moe":
+        return ["moe"] * cfg.n_layers
+    if cfg.family == "mla_moe":
+        return ["mla_dense"] * cfg.dense_layers + ["mla_moe"] * (cfg.n_layers - cfg.dense_layers)
+    if cfg.family == "rwkv":
+        return ["rwkv"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        return ["mamba"] * cfg.n_layers  # shared attn handled separately
+    if cfg.family == "encdec":
+        return ["dec"] * cfg.n_layers
+    raise ValueError(cfg.family)
+
+
+def _scan_groups(cfg: ArchConfig) -> list[tuple[str, int]]:
+    """Contiguous (kind, count) groups -> one stacked scan per group."""
+    kinds = _layer_kinds(cfg)
+    groups: list[tuple[str, int]] = []
+    for kd in kinds:
+        if groups and groups[-1][0] == kd:
+            groups[-1] = (kd, groups[-1][1] + 1)
+        else:
+            groups.append((kd, 1))
+    return groups
+
+
+# ------------------------------------------------------------------- model
+
+
+def init_params(key: jax.Array, cfg: ArchConfig, policy: PrecisionPolicy, *,
+                mode: str = "train", dtype=jnp.bfloat16) -> dict:
+    ninit, _ = _norm_fns(cfg)
+    ke, kh, kb, ks, km = jax.random.split(key, 5)
+    params: dict = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype=dtype),
+        "final_norm": ninit(cfg.d_model),
+        "head": linear_init(kh, cfg.d_model, cfg.vocab_padded, policy.of("head"),
+                            mode=mode, dtype=dtype),
+    }
+    blocks = []
+    for gi, (kind, count) in enumerate(_scan_groups(cfg)):
+        gkey = jax.random.fold_in(kb, gi)
+        keys = jax.random.split(gkey, count)
+        blocks.append(jax.vmap(
+            lambda k: _block_init(k, cfg, policy, mode, dtype, kind=kind)
+        )(keys))
+    params["blocks"] = blocks
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _block_init(ks, cfg, policy, mode, dtype, kind="dense")
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(ks, cfg.enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _block_init(k, cfg, policy, mode, dtype, kind="enc")
+        )(enc_keys)
+        params["enc_norm"] = ninit(cfg.d_model)
+    if cfg.family == "vlm":
+        params["patch_proj"] = linear_init(ks, cfg.d_model, cfg.d_model,
+                                           policy.of("embed"), mode=mode, dtype=dtype)
+    if cfg.mtp:
+        params["mtp_block"] = _block_init(km, cfg, policy, mode, dtype, kind="mla_dense")
+        params["mtp_proj"] = linear_init(jax.random.fold_in(km, 1), 2 * cfg.d_model,
+                                         cfg.d_model, policy.of("head"), mode=mode,
+                                         dtype=dtype)
+        params["mtp_norm"] = ninit(cfg.d_model)
+    return params
+
+
+def _remat_wrap(body, remat_policy: str):
+    if remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
+               caches=None, cache_pos=None, cross_kv=None, causal=True,
+               remat: bool = True, remat_policy: str = "full"):
+    """Scan the grouped block stacks. caches: list matching groups (stacked
+    leading dim) or None. Returns (x, new_caches, aux_sum)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    shared = params.get("shared_attn")
+    attn_every = cfg.attn_every or 0
+    layer_idx = 0
+
+    for gi, blk in enumerate(params["blocks"]):
+        kind = _scan_groups(cfg)[gi][0]
+        count = _scan_groups(cfg)[gi][1]
+        g_cache = None if caches is None else caches[gi]
+
+        def body(carry, xs):
+            h, auxc = carry
+            bp, bc, ckv = xs
+            h2, nc, aux = _block_apply(
+                bp, h, pos, cfg, policy, kind=kind, mode=mode, impl=impl,
+                cache=bc, cache_pos=cache_pos, cross_kv=ckv, causal=causal)
+            return (h2.astype(h.dtype), auxc + aux), nc
+
+        body_fn = (_remat_wrap(body, remat_policy)
+                   if (remat and mode == "train") else body)
+
+        if cfg.family == "hybrid" and shared is not None and attn_every:
+            # interleave the SHARED attention block every `attn_every` layers
+            new_g_cache_chunks = []
+            off = 0
+            sub = 0
+            while off < count:
+                n_sub = min(attn_every, count - off)
+                sl = jax.tree.map(lambda a: a[off : off + n_sub], blk)
+                cc = None if g_cache is None else jax.tree.map(
+                    lambda a: a[off : off + n_sub], g_cache["mamba"])
+                (x, aux_total), nc = jax.lax.scan(
+                    body_fn, (x, aux_total), (sl, cc, None), unroll=RF.unroll(n_sub))
+                if nc is not None:
+                    new_g_cache_chunks.append(nc)
+                sa_cache = (None if g_cache is None else
+                            jax.tree.map(lambda a: a[sub], g_cache["shared"]))
+                x, sa_new, _ = _block_apply(
+                    shared, x, pos, cfg, policy, kind="dense", mode=mode,
+                    impl=impl, cache=sa_cache, cache_pos=cache_pos)
+                if sa_new is not None and g_cache is not None:
+                    new_g_cache_chunks.append(("shared", sub, sa_new))
+                off += n_sub
+                sub += 1
+            # reassemble hybrid caches
+            if g_cache is not None:
+                mamba_parts = [c for c in new_g_cache_chunks if not isinstance(c, tuple)]
+                shared_parts = [c for c in new_g_cache_chunks if isinstance(c, tuple)]
+                mamba_cat = jax.tree.map(lambda *a: jnp.concatenate(a, 0), *mamba_parts)
+                shared_st = jax.tree.map(
+                    lambda *a: jnp.stack(a, 0), *[c[2] for c in shared_parts])
+                new_caches.append({"mamba": mamba_cat, "shared": shared_st})
+            else:
+                new_caches.append(None)
+        else:
+            (x, aux_total), nc = jax.lax.scan(
+                body_fn, (x, aux_total), (blk, g_cache, cross_kv),
+                unroll=RF.unroll(count))
+            new_caches.append(nc)
+        layer_idx += count
+    return x, new_caches, aux_total
+
+
+def forward(params: dict, batch: dict, cfg: ArchConfig, policy: PrecisionPolicy, *,
+            mode: str = "train", impl: ops.Impl = "auto", remat: bool = True,
+            remat_policy: str = "full", output: str = "logits"):
+    """Full-sequence forward (train / eval / prefill-style). Returns
+    (logits (B, S, V), aux dict); with output="hidden", returns the
+    final-norm hidden states instead (the loss applies the head in chunks —
+    (B, S, V) logits are never materialized; see train.step.chunked_ce)."""
+    _, nfn = _norm_fns(cfg)
+    aux: dict[str, Any] = {}
+
+    if cfg.family == "encdec":
+        frames = batch["frames"].astype(jnp.bfloat16)  # (B, S_enc, d) stub frontend
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(frames.shape[1])[None], frames.shape[:2])
+
+        def enc_body(h, bp):
+            h2, _, _ = _block_apply(bp, h, enc_pos, cfg, policy, kind="enc",
+                                    mode=mode, impl=impl, causal=False)
+            return h2.astype(h.dtype), None
+
+        enc_h, _ = jax.lax.scan(enc_body, frames, params["enc_blocks"],
+                                unroll=RF.unroll(cfg.enc_layers))
+        enc_h = nfn(params["enc_norm"], enc_h)
+        # cross K/V are recomputed per decoder layer inside the stack via
+        # kv_override; here we pass raw encoder states and let each layer
+        # project them (weights differ per layer).
+        x = embed_apply(params["embed"], batch["tokens"]).astype(jnp.bfloat16)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+        cross = _encdec_cross_kv(params, enc_h, cfg, policy, mode=mode, impl=impl)
+        x, _, aux_moe = _run_stack(params, x, pos, cfg, policy, mode=mode,
+                                   impl=impl, cross_kv=cross, remat=remat,
+                                   remat_policy=remat_policy)
+    else:
+        tokens = batch["tokens"]
+        x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
+        if cfg.family == "vlm":
+            patches = batch["patches"].astype(jnp.bfloat16)
+            patches = linear_apply(params["patch_proj"], patches,
+                                   policy.of("embed"), mode=mode, impl=impl)
+            x = jax.lax.dynamic_update_slice_in_dim(x, patches, 0, 1)
+            pos = batch["positions"]  # (3, B, S) M-RoPE
+        else:
+            pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+        x, _, aux_moe = _run_stack(params, x, pos, cfg, policy, mode=mode,
+                                   impl=impl, remat=remat,
+                                   remat_policy=remat_policy)
+
+    x = nfn(params["final_norm"], x)
+    aux["moe_aux"] = aux_moe
+
+    if cfg.mtp and mode == "train":
+        # DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+        # [h_t ; emb(token_{t+1})].
+        emb_next = embed_apply(params["embed"], batch["tokens"]).astype(jnp.bfloat16)
+        emb_next = jnp.roll(emb_next, -1, axis=1)
+        _, nfn2 = _norm_fns(cfg)
+        merged = jnp.concatenate([nfn2(params["mtp_norm"], x), emb_next], axis=-1)
+        h_mtp = linear_apply(params["mtp_proj"], merged, policy.of("head"),
+                             mode=mode, impl=impl)
+        pos_m = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+        h_mtp, _, _ = _block_apply(params["mtp_block"], h_mtp, pos_m, cfg, policy,
+                                   kind="mla_dense", mode=mode, impl=impl)
+        if output == "hidden":
+            aux["mtp_hidden"] = h_mtp
+        else:
+            aux["mtp_logits"] = linear_apply(params["head"], h_mtp,
+                                             policy.of("head"), mode=mode, impl=impl)
+    if output == "hidden":
+        return x, aux
+    logits = linear_apply(params["head"], x, policy.of("head"), mode=mode, impl=impl)
+    return logits, aux
+
+
+def _encdec_cross_kv(params, enc_h, cfg, policy, *, mode, impl):
+    """Per-decoder-layer projected encoder K/V, stacked (L, B, S, H, D)."""
+    lp = policy.of("attn_qkv")
+
+    def proj(bp):
+        k = linear_apply(bp["cross"]["wk"], enc_h, lp, mode=mode, impl=impl)
+        v = linear_apply(bp["cross"]["wv"], enc_h, lp, mode=mode, impl=impl)
+        B, S, _ = enc_h.shape
+        return (k.reshape(B, S, cfg.kv_heads, cfg.head_dim),
+                v.reshape(B, S, cfg.kv_heads, cfg.head_dim))
+
+    _, kv = jax.lax.scan(lambda c, bp: (c, proj(bp)), None, params["blocks"][0],
+                         unroll=RF.unroll(cfg.n_layers))
+    return kv
+
+
+# --------------------------------------------------------------- decoding
+
+
+def init_cache(cfg: ArchConfig, policy: PrecisionPolicy, batch: int, s_max: int,
+               *, enc_len: int = 0) -> list:
+    """Per-scan-group stacked caches."""
+    bits = policy.kv_cache_bits
+    caches = []
+    for kind, count in _scan_groups(cfg):
+        if kind in ("dense", "moe"):
+            one = {"self": cache_init(batch, s_max, cfg.kv_heads, cfg.head_dim, bits)}
+        elif kind.startswith("mla"):
+            one = mla_cache_init(batch, s_max, cfg.mla_cfg, bits)
+        elif kind == "mamba":
+            one = ssm.mamba2_state_init(batch, cfg.mamba_cfg)
+        elif kind == "rwkv":
+            one = ssm.rwkv6_state_init(batch, cfg.rwkv_cfg)
+        elif kind == "dec":
+            one = {
+                "self": cache_init(batch, s_max, cfg.kv_heads, cfg.head_dim, bits),
+                "cross": (
+                    jnp.zeros((batch, enc_len, cfg.kv_heads, cfg.head_dim), jnp.bfloat16),
+                    jnp.zeros((batch, enc_len, cfg.kv_heads, cfg.head_dim), jnp.bfloat16),
+                ),
+            }
+        else:
+            raise ValueError(kind)
+        stacked = jax.tree.map(lambda a: jnp.broadcast_to(a, (count,) + a.shape), one)
+        if cfg.family == "hybrid":
+            n_apps = -(-count // cfg.attn_every)
+            sa = {"self": cache_init(batch, s_max, cfg.kv_heads, cfg.head_dim, bits)}
+            sa = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_apps,) + a.shape), sa)
+            stacked = {"mamba": stacked, "shared": sa}
+        caches.append(stacked)
+    return caches
+
+
+def prefill_step(params: dict, batch: dict, caches: list, cfg: ArchConfig,
+                 policy: PrecisionPolicy, *, impl: ops.Impl = "auto"):
+    """Serve-side prefill: full-prompt forward that WRITES the quantized KV
+    cache (flash attention over the fresh k/v) and returns last-token logits
+    only — never materializing (B, S, V). Returns (logits (B,1,V), caches)."""
+    _, nfn = _norm_fns(cfg)
+    mode = "serve"
+    if cfg.family == "encdec":
+        # encoder + cross-KV cache fill, then decoder prefill
+        raise NotImplementedError("whisper prefill lowers via forward(); see engine")
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
+    B, S = tokens.shape
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(jnp.bfloat16)
+        patches = linear_apply(params["patch_proj"], patches, policy.of("embed"),
+                               mode=mode, impl=impl)
+        x = jax.lax.dynamic_update_slice_in_dim(x, patches, 0, 1)
+        pos_ids = batch["positions"]
+    else:
+        pos_ids = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
+                                  impl=impl, caches=caches,
+                                  cache_pos=jnp.int32(0), remat=False)
+    x_last = nfn(params["final_norm"], x[:, -1:])
+    logits = linear_apply(params["head"], x_last, policy.of("head"), mode=mode,
+                          impl=impl)
+    return logits, new_caches
+
+
+def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
+                cfg: ArchConfig, policy: PrecisionPolicy, *,
+                impl: ops.Impl = "auto"):
+    """One serving step: tokens (B, S_new=1), pos = cache write position —
+    scalar int32 (lockstep batch) or (B,) int32 (continuous batching, one
+    offset per slot). Returns (logits (B, S_new, V), new_caches)."""
+    _, nfn = _norm_fns(cfg)
+    mode = "serve"
+    x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
+    B, S = tokens.shape
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (B,))
+    pos_ids = pos_b[:, None] + jnp.arange(S)[None]
+    if cfg.mrope_sections is not None:
+        pos_ids = jnp.broadcast_to(pos_ids[None], (3, B, S))
+    x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
+                                  impl=impl, caches=caches, cache_pos=pos,
+                                  remat=False)
+    x = nfn(params["final_norm"], x)
+    logits = linear_apply(params["head"], x, policy.of("head"), mode=mode, impl=impl)
+    return logits, new_caches

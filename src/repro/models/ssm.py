@@ -1,0 +1,354 @@
+"""State-space / linear-recurrence blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are instances of the gated linear-attention recurrence
+    S_{t+1} = diag(w_t) S_t + k_t^T v_t,
+executed in CHUNKED form (lax.scan over chunks, einsum within) so the FLOPs
+are matmul-shaped and visible to the roofline, instead of a per-token scan.
+
+Numerical strategy (GLA-style, division-free): all decay applications are
+pairwise exponent DIFFERENCES exp(a - b) with a <= b wherever possible; the
+only growing factor, exp(-cum) inside a chunk, is bounded by clamping
+log-decay at LOGW_MIN per token and keeping chunks short (paper: secondary
+chunking; here: chunk=16 for vector decay, 64 for scalar decay).
+
+The recurrences stay in fp32 — the paper's quantization applies to the
+*projections* around them (layer class ``ssm_proj``), not to the exponential
+decay dynamics (DESIGN.md Sec. 8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import linear_apply, linear_init
+from repro.core.policy import PrecisionPolicy
+from repro.kernels import ops
+from repro.models.common import rms_norm, rms_norm_init
+
+LOGW_MIN = -8.0  # per-token decay floor (exp(-8) ~ 3e-4/step)
+
+
+# ------------------------------------------------- chunked linear attention
+
+
+def chunked_linear_attn(
+    r: jax.Array,  # (B, S, H, dk)
+    k: jax.Array,  # (B, S, H, dk)
+    v: jax.Array,  # (B, S, H, dv)
+    log_w: jax.Array,  # (B, S, H, dk) or (B, S, H, 1); <= 0
+    *,
+    mode: str = "ssd",  # "ssd": y_t = r_t . S_{t+1} | "rwkv": y_t = r_t . (S_t + u k_t v_t)
+    u: Optional[jax.Array] = None,  # (H, dk), rwkv bonus
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,  # (B, H, dk, dv)
+):
+    """Returns (o (B, S, H, dv), final_state (B, H, dk, dv))."""
+    from repro import runtime_flags as RF
+
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    L = min(RF.ssm_chunk(chunk), S)
+    pad = -S % L
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v, log_w = zpad(r), zpad(k), zpad(v), zpad(log_w)
+    nC = (S + pad) // L
+
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, nC, L, H, dk)
+    kc = k.astype(f32).reshape(B, nC, L, H, dk)
+    vc = v.astype(f32).reshape(B, nC, L, H, dv)
+    lw = jnp.clip(log_w.astype(f32), LOGW_MIN, 0.0)
+    lw = lw.reshape(B, nC, L, H, lw.shape[-1])
+
+    cum = jnp.cumsum(lw, axis=2)  # inclusive: cum_t = sum_{j<=t} log w_j
+    ex = cum - lw  # exclusive: E_t = sum_{j<t} log w_j
+    cum_L = cum[:, :, -1]  # (B, nC, H, dwk)
+
+    # factors (broadcast dk if decay is per-head scalar)
+    q_exp = cum if mode == "ssd" else ex
+    r_f = rc * jnp.exp(q_exp)  # bounded: exp(<=0)
+    k_intra = kc * jnp.exp(-cum)  # grows within a chunk (bounded by clamp)
+    k_state = kc * jnp.exp(cum_L[:, :, None] - cum)  # bounded: exp(<=0)
+
+    tri = jnp.tril(jnp.ones((L, L), f32), 0 if mode == "ssd" else -1)
+    scores = jnp.einsum("bclhd,bcmhd->bchlm", r_f, k_intra) * tri  # (B,nC,H,L,L)
+    o_intra = jnp.einsum("bchlm,bcmhe->bclhe", scores, vc)
+    if mode == "rwkv":
+        assert u is not None
+        bonus = jnp.einsum("bclhd,hd,bclhd->bclh", rc, u.astype(f32), kc)
+        o_intra = o_intra + bonus[..., None] * vc
+
+    s_chunk = jnp.einsum("bclhd,bclhe->bchde", k_state, vc)  # per-chunk state delta
+    decay_chunk = jnp.exp(jnp.broadcast_to(cum_L[..., None],
+                                           (B, nC, H, cum_L.shape[-1], 1)))
+    if cum_L.shape[-1] == 1:  # scalar decay: broadcast over dk
+        decay_chunk = jnp.broadcast_to(decay_chunk, (B, nC, H, dk, 1))
+
+    S0 = (jnp.zeros((B, H, dk, dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def chunk_step(state, inp):
+        dch, sch, rfc = inp  # decay (B,H,dk,1), delta (B,H,dk,dv), r_f (B,L,H,dk)
+        o_inter = jnp.einsum("blhd,bhde->blhe", rfc, state)
+        new_state = state * dch + sch
+        return new_state, o_inter
+
+    final, o_inter = jax.lax.scan(
+        chunk_step, S0,
+        (decay_chunk.swapaxes(0, 1), s_chunk.swapaxes(0, 1), r_f.swapaxes(0, 1)),
+        unroll=RF.unroll(nC),
+    )
+    o = o_intra + o_inter.swapaxes(0, 1)  # (B, nC, L, H, dv)
+    o = o.reshape(B, S + pad, H, dv)[:, :S]
+    return o.astype(r.dtype), final.astype(f32)
+
+
+def linear_attn_step(
+    r: jax.Array,  # (B, H, dk)
+    k: jax.Array,
+    v: jax.Array,  # (B, H, dv)
+    log_w: jax.Array,  # (B, H, dk) or (B, H, 1)
+    state: jax.Array,  # (B, H, dk, dv)
+    *,
+    mode: str = "ssd",
+    u: Optional[jax.Array] = None,
+):
+    """Single-token recurrence (decode). Returns (o, new_state)."""
+    f32 = jnp.float32
+    r_, k_, v_ = r.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.clip(log_w.astype(f32), LOGW_MIN, 0.0))[..., None]  # (B,H,dk,1)
+    kv = k_[..., None] * v_[..., None, :]  # (B, H, dk, dv)
+    if mode == "ssd":
+        new_state = state * w + kv
+        o = jnp.einsum("bhd,bhde->bhe", r_, new_state)
+    else:
+        o = jnp.einsum("bhd,bhde->bhe", r_, state + u.astype(f32)[None, :, :, None] * kv)
+        new_state = state * w + kv
+    return o.astype(r.dtype), new_state
+
+
+# ----------------------------------------------------------------- Mamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Cfg:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+def mamba2_init(key: jax.Array, cfg: Mamba2Cfg, policy: PrecisionPolicy, *,
+                mode: str = "train", dtype=jnp.float32) -> dict:
+    ki, ko, kc, kd = jax.random.split(key, 4)
+    lp = policy.of("ssm_proj")
+    d_in_proj = 2 * cfg.d_inner + 2 * cfg.d_state + cfg.n_heads
+    H = cfg.n_heads
+    return {
+        "in_proj": linear_init(ki, cfg.d_model, d_in_proj, lp, mode=mode, dtype=dtype),
+        "out_proj": linear_init(ko, cfg.d_inner, cfg.d_model, lp, mode=mode, dtype=dtype),
+        "conv_w": jax.random.normal(kc, (cfg.d_conv, cfg.conv_dim), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((cfg.conv_dim,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "norm": rms_norm_init(cfg.d_inner),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b
+
+
+def mamba2_apply(params: dict, x: jax.Array, cfg: Mamba2Cfg,
+                 policy: PrecisionPolicy, *, mode: str = "train",
+                 impl: ops.Impl = "auto", state: Optional[dict] = None):
+    """Mamba2/SSD mixer. Train/prefill: chunked scan (state None).
+    Decode: ``state`` = {"ssm": (B,H,p,n), "conv": (B,K-1,conv_dim)}."""
+    B, S, _ = x.shape
+    lp = policy.of("ssm_proj")
+    H, p, n = cfg.n_heads, cfg.head_dim, cfg.d_state
+
+    zxbcdt = linear_apply(params["in_proj"], x, lp, mode=mode, impl=impl)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [cfg.d_inner, cfg.d_inner + cfg.conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,)
+
+    if state is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+        new_conv = None
+    else:
+        conv_buf = jnp.concatenate([state["conv"], xbc], axis=1)  # (B, K-1+S, C)
+        xbc_full = _causal_conv(conv_buf, params["conv_w"], params["conv_b"])
+        xbc = jax.nn.silu(xbc_full[:, -S:])
+        new_conv = conv_buf[:, -(cfg.d_conv - 1) :]
+
+    xs, Bc, Cc = jnp.split(xbc, [cfg.d_inner, cfg.d_inner + n], axis=-1)
+    xs = xs.reshape(B, S, H, p)
+    Bc = jnp.broadcast_to(Bc[:, :, None, :], (B, S, H, n))
+    Cc = jnp.broadcast_to(Cc[:, :, None, :], (B, S, H, n))
+    log_w = (dt * A[None, None, :])[..., None]  # (B, S, H, 1)
+    v = xs * dt[..., None]  # discretized input
+
+    if state is not None and S == 1:  # decode
+        o, final = linear_attn_step(
+            Cc[:, 0], Bc[:, 0], v[:, 0], log_w[:, 0], state["ssm"], mode="ssd")
+        o = o[:, None]
+        new_state = {"ssm": final, "conv": new_conv}
+    else:  # train (state None) or prefill (state given, S > 1)
+        init = None if state is None else state["ssm"]
+        o, final = chunked_linear_attn(Cc, Bc, v, log_w, mode="ssd",
+                                       chunk=cfg.chunk, initial_state=init)
+        new_state = {"ssm": final}
+        if new_conv is not None:
+            new_state["conv"] = new_conv
+
+    o = o + params["D"][None, None, :, None] * xs
+    o = o.reshape(B, S, cfg.d_inner)
+    o = rms_norm(params["norm"], o * jax.nn.silu(z))
+    return linear_apply(params["out_proj"], o, lp, mode=mode, impl=impl), new_state
+
+
+def mamba2_state_init(batch: int, cfg: Mamba2Cfg) -> dict:
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), jnp.float32),
+    }
+
+
+# ------------------------------------------------------------------ RWKV6
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Cfg:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0  # channel-mix hidden (3.5x d_model when 0)
+    decay_lora: int = 64
+    chunk: int = 16  # short chunks: vector decay (DESIGN numerics note)
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+    @property
+    def ffn_dim(self) -> int:
+        return self.d_ff or int(3.5 * self.d_model)
+
+
+def rwkv6_init(key: jax.Array, cfg: RWKV6Cfg, policy: PrecisionPolicy, *,
+               mode: str = "train", dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 11)
+    lp = policy.of("ssm_proj")
+    lpf_in, lpf_out = policy.of("ffn_in"), policy.of("ffn_out")
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        # time-mix (attention analogue)
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,w,g static token-shift mix
+        "wr": linear_init(ks[0], d, d, lp, mode=mode, dtype=dtype),
+        "wk": linear_init(ks[1], d, d, lp, mode=mode, dtype=dtype),
+        "wv": linear_init(ks[2], d, d, lp, mode=mode, dtype=dtype),
+        "wg": linear_init(ks[3], d, d, lp, mode=mode, dtype=dtype),
+        "wo": linear_init(ks[4], d, d, lp, mode=mode, dtype=dtype),
+        # data-dependent decay (the RWKV6 "Finch" contribution): w0 + B tanh(x A)
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "wA": jax.random.normal(ks[5], (d, cfg.decay_lora), jnp.float32) * 0.02,
+        "wB": jax.random.normal(ks[6], (cfg.decay_lora, d), jnp.float32) * 0.02,
+        "u": jax.random.normal(ks[7], (H, cfg.head_dim), jnp.float32) * 0.1,
+        "ln_x": rms_norm_init(d),
+        # channel-mix
+        "mu_ffn": 0.5 * jnp.ones((2, d), jnp.float32),
+        "ck": linear_init(ks[8], d, cfg.ffn_dim, lpf_in, mode=mode, dtype=dtype),
+        "cv": linear_init(ks[9], cfg.ffn_dim, d, lpf_out, mode=mode, dtype=dtype),
+        "cr": linear_init(ks[10], d, d, lpf_in, mode=mode, dtype=dtype),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """shift(x)_t = x_{t-1}; position 0 gets ``prev`` (decode carry) or 0."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(params, x, cfg: RWKV6Cfg, policy, *, mode, impl, state=None):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    lp = policy.of("ssm_proj")
+    prev = None if state is None else state["x_att"]
+    xx = _token_shift(x, prev)
+    mu = params["mu"]
+    xr, xk, xv, xw, xg = (x + (xx - x) * mu[i] for i in range(5))
+
+    r = linear_apply(params["wr"], xr, lp, mode=mode, impl=impl).reshape(B, S, H, hd)
+    k = linear_apply(params["wk"], xk, lp, mode=mode, impl=impl).reshape(B, S, H, hd)
+    v = linear_apply(params["wv"], xv, lp, mode=mode, impl=impl).reshape(B, S, H, hd)
+    g = linear_apply(params["wg"], xg, lp, mode=mode, impl=impl)
+    # data-dependent decay: log w = -exp(w0 + tanh(xw A) B)  (always < 0)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ params["wA"]) @ params["wB"]
+    log_w = -jnp.exp(params["w0"] + dd)  # (B, S, d)
+    log_w = log_w.reshape(B, S, H, hd)
+
+    if state is not None and S == 1:  # decode
+        o, final = linear_attn_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state["wkv"],
+            mode="rwkv", u=params["u"])
+        o = o[:, None]
+    else:  # train or prefill
+        init = None if state is None else state["wkv"]
+        o, final = chunked_linear_attn(
+            r, k, v, log_w, mode="rwkv", u=params["u"], chunk=cfg.chunk,
+            initial_state=init)
+    new_state = {"wkv": final, "x_att": x[:, -1]}
+
+    o = o.reshape(B, S, d)
+    o = rms_norm(params["ln_x"], o) * jax.nn.silu(g)
+    return linear_apply(params["wo"], o, lp, mode=mode, impl=impl), new_state
+
+
+def rwkv6_channel_mix(params, x, cfg: RWKV6Cfg, policy, *, mode, impl, state=None):
+    lp_in, lp_out = policy.of("ffn_in"), policy.of("ffn_out")
+    prev = None if state is None else state["x_ffn"]
+    xx = _token_shift(x, prev)
+    mu = params["mu_ffn"]
+    xk = x + (xx - x) * mu[0]
+    xr = x + (xx - x) * mu[1]
+    kk = linear_apply(params["ck"], xk, lp_in, mode=mode, impl=impl)
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = linear_apply(params["cv"], kk, lp_out, mode=mode, impl=impl)
+    rr = jax.nn.sigmoid(linear_apply(params["cr"], xr, lp_in, mode=mode, impl=impl))
+    return rr * vv, {"x_ffn": x[:, -1]}
+
+
+def rwkv6_state_init(batch: int, cfg: RWKV6Cfg) -> dict:
+    return {
+        "wkv": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32),
+        "x_att": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "x_ffn": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }

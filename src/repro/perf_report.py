@@ -1,0 +1,123 @@
+"""Generate EXPERIMENTS.md sections from dry-run artifacts:
+  <!-- DRYRUN_SUMMARY -->  compile proof table (both meshes)
+  <!-- ROOFLINE_TABLE -->  single-pod 3-term roofline
+  <!-- PERF_LOG -->        baseline vs tagged hillclimb runs
+
+Usage: PYTHONPATH=src python -m repro.perf_report [--write]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.roofline import cell_terms, improvement_hint, load_all, table
+
+ART = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "experiments", "dryrun"))
+EXP = os.path.normpath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                    "EXPERIMENTS.md"))
+
+
+def dryrun_summary(recs: list[dict]) -> str:
+    by_mesh: dict[str, dict[str, int]] = {}
+    lines = []
+    for rec in recs:
+        if rec.get("tag"):
+            continue
+        m = by_mesh.setdefault(rec.get("mesh", "?"), {"ok": 0, "skip": 0, "error": 0})
+        m[rec.get("status", "error")] = m.get(rec.get("status", "error"), 0) + 1
+    lines.append("| mesh | compiled ok | skipped (policy) | errors |")
+    lines.append("|---|---|---|---|")
+    for mesh in sorted(by_mesh):
+        c = by_mesh[mesh]
+        lines.append(f"| {mesh} | {c.get('ok', 0)} | {c.get('skip', 0)} "
+                     f"| {c.get('error', 0)} |")
+    lines.append("")
+    lines.append("Per-cell compile proof (full config, rolled scans; "
+                 "`compile_s` on 1 CPU core):")
+    lines.append("")
+    lines.append("| arch | shape | 16x16 | 2x16x16 | HBM/dev GiB (16x16) |")
+    lines.append("|---|---|---|---|---|")
+    cells: dict[tuple, dict] = {}
+    for rec in recs:
+        if rec.get("tag"):
+            continue
+        cells.setdefault((rec["arch"], rec["shape"]), {})[rec["mesh"]] = rec
+
+    def fmt(r):
+        if r is None:
+            return "—"
+        if r.get("status") == "skip":
+            return "skip"
+        if r.get("status") == "error":
+            return "ERR"
+        return f"ok {r.get('compile_s', '?')}s"
+
+    for (arch, shape) in sorted(cells):
+        pair = cells[(arch, shape)]
+        r1, r2 = pair.get("16x16"), pair.get("2x16x16")
+        hbm = "—"
+        if r1 and r1.get("status") == "ok":
+            t = cell_terms(r1)
+            hbm = f"{t['hbm_per_dev_gib']:.1f}" + ("" if t["fits_v5e"] else " (!)")
+        lines.append(f"| {arch} | {shape} | {fmt(r1)} | {fmt(r2)} | {hbm} |")
+    return "\n".join(lines)
+
+
+def perf_log(recs: list[dict]) -> str:
+    """Baseline vs tagged runs, grouped by (arch, shape)."""
+    groups: dict[tuple, list[dict]] = {}
+    for rec in recs:
+        if rec.get("status") != "ok" or rec.get("mesh") != "16x16":
+            continue
+        groups.setdefault((rec["arch"], rec["shape"]), []).append(rec)
+    out = []
+    for key in sorted(groups):
+        rs = sorted(groups[key], key=lambda r: r.get("tag", ""))
+        if len(rs) < 2:
+            continue
+        out.append(f"**{key[0]} × {key[1]}**")
+        out.append("")
+        out.append("| tag | T_comp | T_mem | T_coll | bound | frac | useful "
+                   "| HBM/dev GiB |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        for r in rs:
+            t = cell_terms(r)
+            tag = r.get("tag") or "baseline"
+            out.append(
+                f"| {tag} | {t['t_compute']:.4g} | {t['t_memory']:.4g} "
+                f"| {t['t_collective']:.4g} | {t['dominant']} "
+                f"| {t['roofline_fraction']:.2f} | {t['usefulness']:.2f} "
+                f"| {t['hbm_per_dev_gib']:.1f} |")
+        out.append("")
+    return "\n".join(out) if out else "(no tagged hillclimb runs yet)"
+
+
+def render(write: bool = False) -> str:
+    import re
+
+    recs = load_all(ART)
+    doc = open(EXP).read()
+    subs = {
+        "<!-- DRYRUN_SUMMARY -->": dryrun_summary(recs),
+        "<!-- ROOFLINE_TABLE -->": table(ART, mesh="16x16"),
+        "<!-- PERF_LOG -->": perf_log(recs),
+    }
+    for marker, content in subs.items():
+        # idempotent: replace everything from the marker to the next heading
+        pat = re.compile(re.escape(marker) + r".*?(?=\n## |\Z)", re.S)
+        doc = pat.sub(lambda _: marker + "\n" + content + "\n", doc)
+    if write:
+        with open(EXP, "w") as f:
+            f.write(doc)
+    return doc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true")
+    a = ap.parse_args()
+    doc = render(write=a.write)
+    print("written" if a.write else doc[:3000])

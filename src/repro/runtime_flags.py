@@ -1,0 +1,51 @@
+"""Process-wide lowering flags (trace-time only — never numerical).
+
+``unroll_scans``: the dry-run sets this so every structural lax.scan/map
+(layer stack, flash-attention blocks, CE chunks, SSM chunks) is fully
+unrolled in HLO. XLA's cost_analysis counts a while-loop body ONCE, so
+rolled scans would under-report FLOPs and collective bytes by the trip
+count; unrolled HLO makes the roofline terms exact (EXPERIMENTS.md Sec.
+Dry-run). Execution paths (tests, training, benchmarks) keep scans rolled.
+
+``flash_chunk`` / ``ssm_chunk``: dry-run chunk-size overrides to bound the
+unrolled block count; numerics are irrelevant when only lowering.
+"""
+
+from __future__ import annotations
+
+FLAGS = {
+    "unroll_scans": False,
+    "flash_chunk": None,  # int | None (auto)
+    "ssm_chunk": None,  # int | None (per-block config)
+    # hillclimb: causal flash skips fully-future kv blocks in the static
+    # (unrolled) schedule — what a Pallas flash kernel does via grid
+    # predication. Off for baselines.
+    "causal_skip": False,
+    # hillclimb: int8 MoE dispatch payloads (serve mode) — the paper's
+    # quantization applied to the EP all-to-all. None | 8.
+    "moe_dispatch_bits": None,
+}
+
+
+def unroll(n: int) -> int | bool:
+    """lax.scan unroll parameter for a loop of ``n`` steps."""
+    return n if FLAGS["unroll_scans"] else 1
+
+
+def unrolled() -> bool:
+    return bool(FLAGS["unroll_scans"])
+
+
+def flash_chunk(default: int, seq: int) -> int:
+    if FLAGS["flash_chunk"]:
+        return int(FLAGS["flash_chunk"])
+    if FLAGS["unroll_scans"]:
+        # bound unrolled block count: <= 8 chunks along each axis
+        return max(default, -(-seq // 8))
+    return default
+
+
+def ssm_chunk(default: int) -> int:
+    if FLAGS["ssm_chunk"]:
+        return int(FLAGS["ssm_chunk"])
+    return default

@@ -1,0 +1,126 @@
+"""Serving engine: prefill + decode with continuous batching over static
+slots, plus a step-time straggler watchdog.
+
+serve_step == models.model.decode_step (one new token against the quantized
+KV cache); this module owns request lifecycle and batching — the layer a
+production deployment scripts against (examples/serve_batched.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.models import model as M
+from repro.models.model import ArchConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int = 16
+    out: Optional[list] = None
+
+
+class StepMonitor:
+    """EMA step-time watchdog: flags straggler steps (> factor x EMA).
+    At multi-host scale the flag feeds the coordinator's slow-host logic;
+    here it logs and counts (DESIGN.md Sec. 9)."""
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.1):
+        self.factor, self.alpha = factor, alpha
+        self.ema: Optional[float] = None
+        self.stragglers = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        self.ema = dt if self.ema is None else (1 - self.alpha) * self.ema + self.alpha * dt
+        if slow:
+            self.stragglers += 1
+        return slow
+
+
+class ServeEngine:
+    """Continuous batching over ``n_slots`` static cache slots."""
+
+    def __init__(self, params, cfg: ArchConfig, policy: PrecisionPolicy, *,
+                 n_slots: int = 4, s_max: int = 64, impl="auto",
+                 greedy: bool = True):
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.n_slots, self.s_max = n_slots, s_max
+        self.caches = M.init_cache(cfg, policy, n_slots, s_max)
+        self.slot_pos = np.zeros(n_slots, np.int32)  # next write position
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_remaining = np.zeros(n_slots, np.int32)
+        self.monitor = StepMonitor()
+        self.impl = impl
+
+        self._decode = jax.jit(
+            lambda p, tok, pos, caches: M.decode_step(
+                p, tok, pos, caches, cfg, policy, impl=impl),
+            static_argnames=())
+
+    # --- request lifecycle -------------------------------------------------
+
+    def _step(self, toks: np.ndarray):
+        """One decode step with per-slot cache positions (vector pos)."""
+        t0 = time.perf_counter()
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(self.slot_pos),
+            self.caches)
+        self.monitor.observe(time.perf_counter() - t0)
+        return logits
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Token-by-token prefill into one slot; other slots' cache rows are
+        untouched (their write positions do not advance, so any transient
+        writes are overwritten by their next real step)."""
+        logits = None
+        for tok in req.prompt:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            toks[slot, 0] = tok
+            logits = self._step(toks)
+            self.slot_pos[slot] += 1
+        req.out = []
+        self.slot_req[slot] = req
+        self.slot_remaining[slot] = req.max_new
+        return logits
+
+    def run(self, requests: list[Request], *, on_token: Optional[Callable] = None):
+        """Drive all requests to completion; returns {rid: [token, ...]}."""
+        queue = list(requests)
+        results: dict[int, list[int]] = {}
+        active = lambda: any(r is not None for r in self.slot_req)
+        while queue or active():
+            # fill free slots (continuous batching: admit while others decode)
+            for s in range(self.n_slots):
+                if self.slot_req[s] is None and queue:
+                    if self.slot_pos[s] + len(queue[0].prompt) + queue[0].max_new > self.s_max:
+                        self.slot_pos[s] = 0  # recycle slot (fresh context)
+                    self._prefill_slot(s, queue.pop(0))
+            # one decode step for every active slot
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            for s, r in enumerate(self.slot_req):
+                if r is not None:
+                    toks[s, 0] = (r.prompt[-1] if not r.out else r.out[-1])
+            logits = self._step(toks)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            for s, r in enumerate(self.slot_req):
+                if r is None:
+                    continue
+                r.out.append(int(nxt[s]))
+                self.slot_pos[s] += 1
+                self.slot_remaining[s] -= 1
+                if on_token:
+                    on_token(r.rid, int(nxt[s]))
+                if self.slot_remaining[s] <= 0:
+                    results[r.rid] = r.out
+                    self.slot_req[s] = None
+        return results

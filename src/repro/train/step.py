@@ -1,0 +1,182 @@
+"""Training step: QAT loss, microbatched gradient accumulation (the
+compute/comm-overlap structure), clipping, AdamW, optional int8-compressed
+data-parallel all-reduce.
+
+The returned step functions are pure and pjit-able; sharding is applied by
+the launcher (launch/train.py, launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import PrecisionPolicy
+from repro.models import model as M
+from repro.models.model import ArchConfig
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainCfg:
+    opt: opt.OptCfg = dataclasses.field(default_factory=opt.OptCfg)
+    microbatches: int = 1  # grad accumulation steps per global step
+    moe_aux_weight: float = 0.01
+    mtp_weight: float = 0.3
+    remat: bool = True
+    remat_policy: str = "full"  # "full" | "dots" (save matmul outputs)
+    grad_compression: Optional[str] = None  # None | "int8_ef" (shard_map path)
+
+
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy, fp32. logits (B, S, V), labels (B, S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_ce(head_params: dict, hidden: jax.Array, labels: jax.Array,
+               policy: PrecisionPolicy, *, mode: str = "train", impl="auto",
+               chunk: int = 512) -> jax.Array:
+    """Streaming cross-entropy: the LM head is applied per sequence chunk
+    inside a rematerialized scan, so (B, S, V) logits never exist — with a
+    92k-152k vocab that is the difference between ~1 GB and ~20 GB of temps
+    per device. The gold logit uses a one-hot einsum (vocab-sharding
+    friendly: no cross-shard gather)."""
+    from repro import runtime_flags as RF
+    from repro.core.linear import linear_apply
+
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    pad = -S % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    valid = (jnp.arange(S + pad) < S).astype(jnp.float32)
+    n = (S + pad) // c
+    hs = hidden.reshape(B, n, c, d).swapaxes(0, 1)  # (n, B, c, d)
+    ys = labels.reshape(B, n, c).swapaxes(0, 1)
+    vs = valid.reshape(n, c)
+    lp = policy.of("head")
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h_c, y_c, v_c = xs
+        logits = linear_apply(head_params, h_c, lp, mode=mode, impl=impl)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)  # (B, c)
+        # one-hot in bf16 (0/1 exact); einsum promotes to f32 -> exact gold
+        oh = jax.nn.one_hot(y_c, lf.shape[-1], dtype=jnp.bfloat16)
+        gold = jnp.einsum("bcv,bcv->bc", lf, oh)
+        return acc + jnp.sum((lse - gold) * v_c[None, :]), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ys, vs),
+                            unroll=RF.unroll(n))
+    return total / (B * S)
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig, policy: PrecisionPolicy,
+            tcfg: TrainCfg, *, impl="auto"):
+    hidden, aux = M.forward(params, batch, cfg, policy, mode="train",
+                            impl=impl, remat=tcfg.remat,
+                            remat_policy=tcfg.remat_policy, output="hidden")
+    tokens = batch["tokens"]
+    ce = chunked_ce(params["head"], hidden[:, :-1], tokens[:, 1:], policy,
+                    impl=impl)
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.n_experts:
+        loss = loss + tcfg.moe_aux_weight * aux["moe_aux"]
+        metrics["moe_aux"] = aux["moe_aux"]
+    if cfg.mtp and "mtp_hidden" in aux:
+        mtp_ce = chunked_ce(params["head"], aux["mtp_hidden"][:, :-2],
+                            tokens[:, 2:], policy, impl=impl)
+        loss = loss + tcfg.mtp_weight * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def grads_fn(params, batch, cfg, policy, tcfg, *, impl="auto"):
+    """Microbatched value-and-grad. With microbatches > 1, the batch axis is
+    split and scanned; XLA overlaps each microbatch's DP all-reduce with the
+    next microbatch's backward (async collectives)."""
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if tcfg.microbatches <= 1:
+        (loss, metrics), grads = gfn(params, batch, cfg, policy, tcfg, impl=impl)
+        return grads, metrics
+
+    n = tcfg.microbatches
+    split = jax.tree.map(lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:])
+                         if a.ndim >= 1 and a.shape[0] % n == 0 else
+                         jnp.broadcast_to(a, (n,) + a.shape), batch)
+    # vlm positions are (3, B, S): split on axis 1
+    if "positions" in batch:
+        p = batch["positions"]
+        split["positions"] = p.reshape(3, n, p.shape[1] // n, -1).swapaxes(0, 1)
+
+    def micro(carry, mb):
+        g_acc, m_acc = carry
+        (loss, metrics), g = gfn(params, mb, cfg, policy, tcfg, impl=impl)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+        return (g_acc, m_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    m0 = {"ce": 0.0, "loss": 0.0}
+    if cfg.n_experts:
+        m0["moe_aux"] = 0.0
+    if cfg.mtp:
+        m0["mtp_ce"] = 0.0
+    m0 = jax.tree.map(jnp.float32, m0)
+    from repro import runtime_flags as RF
+
+    (g_sum, m_sum), _ = jax.lax.scan(micro, (g0, m0), split, unroll=RF.unroll(n))
+    grads = jax.tree.map(lambda a: a / n, g_sum)
+    metrics = jax.tree.map(lambda a: a / n, m_sum)
+    return grads, metrics
+
+
+def make_train_step(cfg: ArchConfig, policy: PrecisionPolicy, tcfg: TrainCfg,
+                    *, impl="auto", dp_axis: Optional[str] = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", ("ef")}. When ``dp_axis`` is set the step is
+    meant to run under shard_map and performs an explicit (optionally
+    int8-compressed) gradient all-reduce over that axis; under plain pjit
+    (dp_axis None) GSPMD inserts the all-reduce automatically.
+    """
+
+    def train_step(state, batch):
+        grads, metrics = grads_fn(state["params"], batch, cfg, policy, tcfg, impl=impl)
+        if dp_axis is not None:
+            if tcfg.grad_compression == "int8_ef":
+                grads, new_ef = opt.compressed_grad_allreduce(
+                    grads, state["ef"], dp_axis)
+            else:
+                grads = jax.lax.pmean(grads, dp_axis)
+                new_ef = state.get("ef")
+        params, opt_state, om = opt.adamw_update(
+            grads, state["opt"], state["params"], tcfg.opt)
+        metrics.update(om)
+        new_state = {"params": params, "opt": opt_state}
+        if dp_axis is not None and "ef" in state:
+            new_state["ef"] = new_ef
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ArchConfig, policy: PrecisionPolicy,
+                     tcfg: TrainCfg, *, dtype=jnp.bfloat16) -> dict:
+    params = M.init_params(key, cfg, policy, mode="train", dtype=dtype)
+    state = {"params": params, "opt": opt.adamw_init(params)}
+    if tcfg.grad_compression == "int8_ef":
+        state["ef"] = opt.ef_state_init(params)
+    return state

@@ -1,0 +1,205 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle, swept
+across all 27 precision permutations and assorted shapes (incl. non-aligned)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack as P
+from repro.core import quant as Q
+from repro.core.policy import PERMUTATIONS
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RNG = np.random.RandomState(1234)
+
+
+def rand_packed_act(m, k, bits):
+    spec = Q.ACT_SPECS[bits]
+    q = RNG.randint(spec.qmin, spec.qmax + 1, size=(m, k)).astype(np.uint8)
+    return jnp.asarray(P.pack_np(q, bits)), q
+
+
+def rand_packed_wgt(n, k, bits):
+    spec = Q.WGT_SPECS[bits]
+    q = RNG.randint(spec.qmin, spec.qmax + 1, size=(n, k)).astype(np.int8)
+    return jnp.asarray(P.pack_np(q, bits)), q
+
+
+def rand_rq(y_bits, k, x_bits, w_bits):
+    # realistic eps_phi: accumulator magnitude ~ k * |w|max * |x|max
+    amax = k * Q.WGT_SPECS[w_bits].qmax * Q.ACT_SPECS[x_bits].qmax
+    eps_phi = 1.0 / max(amax, 1)
+    return Q.make_requant_params(
+        y_bits=y_bits, kappa=1.7, lam=3.1, eps_phi=eps_phi * 64, eps_y=1.0
+    )
+
+
+@pytest.mark.parametrize("x_bits,w_bits,y_bits", PERMUTATIONS)
+def test_mpmm_all_27_permutations(x_bits, w_bits, y_bits):
+    """The paper's 27-kernel matrix: Pallas == oracle, bit exact."""
+    m, k, n = 16, 64, 32
+    x_p, _ = rand_packed_act(m, k, x_bits)
+    w_p, _ = rand_packed_wgt(n, k, w_bits)
+    rq = rand_rq(y_bits, k, x_bits, w_bits)
+    want = ref.mpmm_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits)
+    got = ops.mpmm(
+        x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
+        impl="pallas", bm=8, bn=16, bk=32,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (1, 128, 128, 8, 128, 128),   # decode GEMV
+        (33, 96, 40, 16, 16, 32),     # non-aligned everything (padded)
+        (64, 256, 64, 32, 32, 64),    # multi-step K accumulation
+    ],
+)
+def test_mpmm_shapes_and_padding(m, k, n, bm, bn, bk):
+    x_bits, w_bits, y_bits = 8, 4, 8
+    x_p, _ = rand_packed_act(m, k, x_bits)
+    w_p, _ = rand_packed_wgt(n, k, w_bits)
+    rq = rand_rq(y_bits, k, x_bits, w_bits)
+    want = ref.mpmm_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits)
+    got = ops.mpmm(
+        x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
+        impl="pallas", bm=bm, bn=bn, bk=bk,
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("out_kind", ["int32", "f32"])
+def test_mpmm_raw_accumulator_outputs(out_kind):
+    """int32 phi / dequantized f32 outputs (head & attention feeds)."""
+    m, k, n = 16, 64, 32
+    x_bits, w_bits = 8, 2
+    x_p, xq = rand_packed_act(m, k, x_bits)
+    w_p, wq = rand_packed_wgt(n, k, w_bits)
+    rq = rand_rq(8, k, x_bits, w_bits)
+    scale = 0.0125
+    want = xq.astype(np.int64) @ wq.astype(np.int64).T
+    got = ops.mpmm(
+        x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=8,
+        out_kind=out_kind, out_scale=scale, impl="pallas", bm=8, bn=16, bk=32,
+    )
+    if out_kind == "int32":
+        np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+    else:
+        np.testing.assert_allclose(np.asarray(got), want * scale, rtol=1e-6)
+
+
+def test_mpmm_jnp_path_matches_pallas():
+    """The CPU/dry-run jnp path and the Pallas kernel are interchangeable."""
+    m, k, n = 24, 128, 48
+    for x_bits, w_bits, y_bits in [(8, 8, 8), (4, 2, 4), (2, 4, 2)]:
+        x_p, _ = rand_packed_act(m, k, x_bits)
+        w_p, _ = rand_packed_wgt(n, k, w_bits)
+        rq = rand_rq(y_bits, k, x_bits, w_bits)
+        a = ops.mpmm(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl="jnp")
+        b = ops.mpmm(
+            x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
+            impl="pallas", bm=8, bn=16, bk=64,
+        )
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("x_bits", [2, 4, 8])
+def test_mpmm_signed_x_variant(x_bits):
+    """LM hidden-state variant: signed acts stored offset-binary; the dot must
+    equal the plain signed integer matmul, on both impls."""
+    m, k, n = 16, 64, 32
+    half = 1 << (x_bits - 1)
+    xs = RNG.randint(-half, half, size=(m, k)).astype(np.int32)  # true signed vals
+    stored = (xs + half).astype(np.uint8)
+    x_p = jnp.asarray(P.pack_np(stored, x_bits))
+    w_p, wq = rand_packed_wgt(n, k, 4)
+    want = xs.astype(np.int64) @ wq.astype(np.int64).T
+    for impl, kw in [("jnp", {}), ("pallas", dict(bm=8, bn=16, bk=32))]:
+        got = ops.mpmm(
+            x_p, w_p, None, x_bits=x_bits, w_bits=4, y_bits=8, x_signed=True,
+            out_kind="int32", impl=impl, **kw,
+        )
+        np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
+
+
+@pytest.mark.parametrize("w_bits", [8, 4, 2])
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (8, 128, 64, 8, 32, 64),
+    (32, 64, 32, 16, 16, 32),   # multi-step K
+])
+def test_wdqmm_weight_only_dequant_matmul(w_bits, m, k, n, bm, bn, bk):
+    """Weight-only dequant kernel (decode GEMV path): Pallas == ref."""
+    from repro.kernels.wdqmm import wdqmm_pallas, wdqmm_ref
+
+    x = jnp.asarray(RNG.randn(m, k).astype(np.float32))
+    w_p, _ = rand_packed_wgt(n, k, w_bits)
+    eps = jnp.float32(0.02)
+    want = np.asarray(wdqmm_ref(x, w_p, eps, w_bits=w_bits))
+    got = wdqmm_pallas(x, w_p, eps, w_bits=w_bits, bm=bm, bn=bn, bk=bk,
+                       interpret=True)
+    # bf16 MXU operands in-kernel vs f32 ref: bf16-grade tolerance, scaled
+    np.testing.assert_allclose(np.asarray(got), want,
+                               rtol=2e-2, atol=0.02 * np.abs(want).max())
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 16, 32), (16, 32, 64), (8, 32, 32)])
+def test_mpmm_block_shape_sweep(bm, bn, bk):
+    """Blocking must never change results (VMEM tiling invariance)."""
+    m, k, n = 32, 128, 64
+    x_p, _ = rand_packed_act(m, k, 4)
+    w_p, _ = rand_packed_wgt(n, k, 2)
+    rq = rand_rq(4, k, 4, 2)
+    want = ref.mpmm_ref(x_p, w_p, rq, x_bits=4, w_bits=2, y_bits=4)
+    got = ops.mpmm(x_p, w_p, rq, x_bits=4, w_bits=2, y_bits=4,
+                   impl="pallas", bm=bm, bn=bn, bk=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("y_bits", [2, 4, 8])
+def test_qntpack_kernel(y_bits):
+    m, n = 48, 64
+    phi = jnp.asarray(RNG.randint(-(2**18), 2**18, size=(m, n)).astype(np.int32))
+    rq = Q.make_requant_params(y_bits=y_bits, kappa=1.1, lam=-7.0, eps_phi=2**-10, eps_y=1.0)
+    want = ref.qntpack_ref(phi, rq, y_bits=y_bits)
+    got = ops.qntpack(phi, rq, y_bits=y_bits, impl="pallas", bm=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("x_bits,w_bits,y_bits", [
+    (8, 8, 8), (8, 4, 8), (8, 2, 8), (4, 8, 4), (4, 4, 2), (2, 2, 4), (2, 8, 2),
+])
+def test_conv2d_reference_layer_family(x_bits, w_bits, y_bits):
+    """Paper Reference Layer family: 3x3/s1/p1 HWC conv, Pallas == oracle."""
+    H, W, C, Cout = 8, 8, 16, 32
+    spec = Q.ACT_SPECS[x_bits]
+    xq = RNG.randint(spec.qmin, spec.qmax + 1, size=(H, W, C)).astype(np.uint8)
+    x_p = jnp.asarray(P.pack_np(xq, x_bits))
+    wspec = Q.WGT_SPECS[w_bits]
+    wq = RNG.randint(wspec.qmin, wspec.qmax + 1, size=(Cout, 9 * C)).astype(np.int8)
+    w_p = jnp.asarray(P.pack_np(wq, w_bits))
+    rq = rand_rq(y_bits, 9 * C, x_bits, w_bits)
+    want = ref.conv2d_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits)
+    got = ops.conv2d(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv2d_paper_reference_layer_exact_shape():
+    """The exact Reference Layer: 32x16x16 ifmap -> 64x16x16 ofmap, 3x3,
+    im2col size 288 (paper Sec. 4)."""
+    H = W = 16
+    C, Cout = 32, 64
+    xq = RNG.randint(0, 256, size=(H, W, C)).astype(np.uint8)
+    x_p = jnp.asarray(P.pack_np(xq, 8))
+    wq = RNG.randint(-8, 8, size=(Cout, 9 * C)).astype(np.int8)
+    w_p = jnp.asarray(P.pack_np(wq, 4))
+    assert 9 * C == 288  # the paper's im2col buffer size
+    rq = rand_rq(4, 9 * C, 8, 4)
+    want = ref.conv2d_ref(x_p, w_p, rq, x_bits=8, w_bits=4, y_bits=4)
+    got = ops.conv2d(x_p, w_p, rq, x_bits=8, w_bits=4, y_bits=4, impl="pallas")
+    assert got.shape == (16, 16, 64 // 2)  # packed 4-bit ofmap
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

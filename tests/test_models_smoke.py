@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward + one decode step on CPU, asserting output
+shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import get_policy
+from repro.models import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+POLICY = get_policy("w4a8")
+ARCH_IDS = sorted(configs.ARCHS)
+
+
+def _batch(cfg, rng):
+    if cfg.family == "encdec":
+        return {
+            "frames": jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jnp.asarray(rng.randint(0, cfg.vocab, (B, S)), jnp.int32),
+        }
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(rng.randn(B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        batch["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_train_mode(arch_id):
+    cfg = configs.reduced(configs.get_arch(arch_id))
+    rng = np.random.RandomState(0)
+    params = M.init_params(jax.random.key(0), cfg, POLICY, mode="train")
+    logits, aux = M.forward(params, _batch(cfg, rng), cfg, POLICY, mode="train", impl="jnp")
+    s_out = S if cfg.family != "encdec" else S
+    assert logits.shape == (B, s_out, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    if cfg.n_experts:
+        assert np.isfinite(float(aux["moe_aux"]))
+    if cfg.mtp:
+        assert aux["mtp_logits"].shape == (B, S, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_serve_mode_integer_path(arch_id):
+    """The integer serving path (packed weights + mpmm) lowers and runs."""
+    cfg = configs.reduced(configs.get_arch(arch_id))
+    rng = np.random.RandomState(1)
+    params = M.init_params(jax.random.key(1), cfg, POLICY, mode="serve")
+    logits, _ = M.forward(params, _batch(cfg, rng), cfg, POLICY, mode="serve", impl="jnp")
+    assert logits.shape[-1] == cfg.vocab
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_decode_step(arch_id):
+    cfg = configs.reduced(configs.get_arch(arch_id))
+    params = M.init_params(jax.random.key(2), cfg, POLICY, mode="serve")
+    caches = M.init_cache(cfg, POLICY, B, 32, enc_len=S)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, new_caches = M.decode_step(params, tok, jnp.int32(3), caches, cfg,
+                                       POLICY, impl="jnp")
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache trees keep their structure and shapes
+    jax.tree.map(lambda a, b: (_ for _ in ()).throw(AssertionError((a.shape, b.shape)))
+                 if a.shape != b.shape else None, caches, new_caches)
+
+
+def test_decode_matches_forward_dense():
+    """Decode with cache reproduces teacher-forced forward logits (dense)."""
+    cfg = configs.reduced(configs.get_arch("internlm2-1.8b"))
+    policy = get_policy("bf16")  # exactness: no act quant noise
+    params = M.init_params(jax.random.key(3), cfg, policy, mode="train")
+    rng = np.random.RandomState(3)
+    batch = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab, (1, 8)), jnp.int32)}
+    full_logits, _ = M.forward(params, batch, cfg, policy, mode="train", impl="jnp",
+                               remat=False)
+    caches = M.init_cache(cfg, policy, 1, 8)
+    outs = []
+    for t in range(8):
+        lg, caches = M.decode_step(params, batch["tokens"][:, t : t + 1],
+                                   jnp.int32(t), caches, cfg, policy, impl="jnp")
+        outs.append(np.asarray(lg[:, 0], np.float32))
+    dec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        dec, np.asarray(full_logits, np.float32), rtol=2e-2, atol=2e-2)

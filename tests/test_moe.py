@@ -1,0 +1,83 @@
+"""MoE dispatch correctness: grouped sort-based dispatch == naive per-token
+routing loop; capacity drops bounded; int8 dispatch payload accuracy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime_flags as RF
+from repro.core.policy import get_policy
+from repro.models.ffn import MoECfg, _dispatch_groups, moe_apply, moe_init
+
+jax.config.update("jax_platform_name", "cpu")
+
+POLICY = get_policy("bf16")  # exact expert math for equivalence checks
+
+
+def naive_moe(params, x, cfg: MoECfg):
+    """Token-by-token reference (no capacity drops)."""
+    B, S, d = x.shape
+    xt = np.asarray(x, np.float32).reshape(-1, d)
+    logits = xt @ np.asarray(params["router"]["w"], np.float32).T
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    top_i = np.argsort(-probs, axis=-1)[:, : cfg.top_k]
+    y = np.zeros_like(xt)
+    for t in range(xt.shape[0]):
+        ps = probs[t, top_i[t]]
+        ps = ps / ps.sum()
+        for j, e in enumerate(top_i[t]):
+            g = np.asarray(params["gate"]["w"][e], np.float32)
+            u = np.asarray(params["up"]["w"][e], np.float32)
+            dn = np.asarray(params["down"]["w"][e], np.float32)
+            h = (xt[t] @ g.T) * (1 / (1 + np.exp(-(xt[t] @ g.T)))) * (xt[t] @ u.T)
+            y[t] += ps[j] * (h @ dn.T)
+    return y.reshape(B, S, d)
+
+
+def test_moe_matches_naive_routing_no_drops():
+    cfg = MoECfg(d_model=16, n_experts=4, top_k=2, d_ff_expert=8,
+                 capacity_factor=8.0, router_bias_balance=False)
+    params = moe_init(jax.random.key(0), cfg, POLICY, mode="train", dtype=jnp.float32)
+    x = jnp.asarray(np.random.RandomState(0).randn(2, 8, 16), jnp.float32)
+    got, aux = moe_apply(params, x, cfg, POLICY, mode="train", impl="jnp")
+    want = naive_moe(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_dispatch_groups_adaptive():
+    assert _dispatch_groups(1024) == 1  # decode: no group fragmentation
+    assert _dispatch_groups(8192) == 1
+    assert _dispatch_groups(1 << 20) == 32  # train: shard-local sorts
+
+
+def test_int8_dispatch_payload_accuracy():
+    """serve-mode int8 dispatch stays within quantization noise of exact."""
+    cfg = MoECfg(d_model=32, n_experts=4, top_k=2, d_ff_expert=16,
+                 capacity_factor=8.0, router_bias_balance=False)
+    params = moe_init(jax.random.key(1), cfg, POLICY, mode="train", dtype=jnp.float32)
+    x = jnp.asarray(np.random.RandomState(1).randn(1, 16, 32), jnp.float32)
+    exact, _ = moe_apply(params, x, cfg, POLICY, mode="serve", impl="jnp")
+    RF.FLAGS["moe_dispatch_bits"] = 8
+    try:
+        q, _ = moe_apply(params, x, cfg, POLICY, mode="serve", impl="jnp")
+    finally:
+        RF.FLAGS["moe_dispatch_bits"] = None
+    rel = float(jnp.linalg.norm(q - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel  # 1/127-grade noise through the expert stack
+
+
+def test_capacity_drops_are_bounded():
+    """With cf=1.0 and adversarially-skewed routing, dropped tokens produce
+    zero contribution (not NaN/garbage)."""
+    cfg = MoECfg(d_model=8, n_experts=2, top_k=1, d_ff_expert=8,
+                 capacity_factor=0.25, router_bias_balance=False)
+    params = moe_init(jax.random.key(2), cfg, POLICY, mode="train", dtype=jnp.float32)
+    x = jnp.asarray(np.random.RandomState(2).randn(1, 32, 8), jnp.float32)
+    y, _ = moe_apply(params, x, cfg, POLICY, mode="train", impl="jnp")
+    assert np.isfinite(np.asarray(y)).all()
+    # some rows must be exactly zero (dropped)
+    norms = np.linalg.norm(np.asarray(y)[0], axis=-1)
+    assert (norms < 1e-6).any()
