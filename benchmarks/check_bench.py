@@ -1,0 +1,110 @@
+"""CI bench-smoke gate: diff emitted ``BENCH_*.json`` rows against the
+``benchmarks/tuned/`` baselines.
+
+Checks, per benchmark:
+  1. coverage — the emitted row set matches the baseline expectation
+     (fig4: all 27 mpmm permutations; tab1: all 3 ofmap precisions). A
+     missing row means a cell of the kernel matrix silently stopped being
+     exercised — the exact failure mode a per-permutation library cannot
+     afford.
+  2. tile provenance — each row's tiles equal the checked-in tuned-cache
+     winner for its (permutation, shape) cell (or the static default when
+     that cell is untuned), so the benchmark really ran what the cache says.
+  3. within-run perf invariant — ``us_tuned <= us_static * tol``. Both
+     numbers come from the same process on the same machine, so this holds
+     across runner speeds; tol absorbs timer noise.
+
+Absolute microseconds are intentionally NOT gated: CI runners vary too much.
+Exit code 0 = green, 1 = any check failed (report on stdout).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def _load(path: pathlib.Path) -> dict:
+    try:
+        return json.loads(path.read_text())
+    except (OSError, ValueError):
+        sys.exit(f"check_bench: missing or corrupt artifact {path} — run "
+                 f"`python -m benchmarks.run --only fig4,tab1` first")
+
+
+def _expected_perms() -> dict[str, set[str]]:
+    from repro.core.policy import PERMUTATIONS
+    from repro.kernels import tuning
+
+    return {
+        "fig4": {tuning.perm_key(*p) for p in PERMUTATIONS},
+        "tab1": {tuning.perm_key(y_bits=b) for b in (8, 4, 2)},
+    }
+
+
+def check_bench(bench: str, out_dir: pathlib.Path, tuned_dir: pathlib.Path,
+                tol: float) -> list[str]:
+    from repro.kernels import tuning
+
+    doc = _load(out_dir / f"BENCH_{bench}.json")
+    rows = {r["perm"]: r for r in doc.get("rows", [])}
+    errors: list[str] = []
+
+    want = _expected_perms()[bench]
+    missing, extra = want - set(rows), set(rows) - want
+    if missing:
+        errors.append(f"{bench}: missing permutation rows: {sorted(missing)}")
+    if extra:
+        errors.append(f"{bench}: unexpected permutation rows: {sorted(extra)}")
+
+    caches: dict[str, tuning.TileCache] = {}
+    for perm, row in sorted(rows.items()):
+        op = row["op"]
+        if op not in caches:
+            caches[op] = tuning.TileCache(op, tuned_dir / f"tiles_{op}.json")
+        hit = caches[op].get(perm, row["shape"])
+        baseline = ({k: int(hit[k]) for k in row["tiles"]} if hit
+                    else {k: tuning.STATIC_DEFAULTS[op][k] for k in row["tiles"]})
+        if {k: int(v) for k, v in row["tiles"].items()} != baseline:
+            errors.append(
+                f"{bench}/{perm}: tiles {row['tiles']} != baseline {baseline} "
+                f"({'tuned cache' if hit else 'static default'})")
+        if row["us_tuned"] > row["us_static"] * tol:
+            errors.append(
+                f"{bench}/{perm}: tuned tiles slower than static defaults: "
+                f"{row['us_tuned']}us > {row['us_static']}us * {tol}")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(HERE / "out"),
+                    help="directory holding emitted BENCH_*.json")
+    ap.add_argument("--tuned", default=str(HERE / "tuned"),
+                    help="baseline directory (checked-in tuned tile caches)")
+    ap.add_argument("--benches", default="fig4,tab1")
+    ap.add_argument("--tol", type=float, default=1.25,
+                    help="tuned/static slack for timer noise")
+    args = ap.parse_args()
+
+    errors: list[str] = []
+    for bench in args.benches.split(","):
+        errors += check_bench(bench.strip(), pathlib.Path(args.out),
+                              pathlib.Path(args.tuned), args.tol)
+    if errors:
+        print(f"check_bench: {len(errors)} failure(s)")
+        for e in errors:
+            print(f"  FAIL {e}")
+        sys.exit(1)
+    print("check_bench: all benchmark rows match baselines")
+
+
+if __name__ == "__main__":
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    main()

@@ -4,6 +4,9 @@ relevant metric (this container has no TPU — stated in EXPERIMENTS.md)."""
 
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import time
 
 import jax
@@ -63,3 +66,29 @@ def ref_layer_bytes(x_bits: int, w_bits: int, y_bits: int) -> dict:
 
 def csv_row(name: str, us: float, derived: str):
     print(f"{name},{us:.2f},{derived}")
+
+
+# ------------------------------------------------- machine-readable emission
+
+
+def bench_out_dir() -> pathlib.Path:
+    env = os.environ.get("BENCH_OUT_DIR")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path(__file__).resolve().parent / "out"
+
+
+def emit_json(bench: str, rows: list[dict]) -> pathlib.Path:
+    """Write one benchmark's rows as ``BENCH_<bench>.json`` (the artifact the
+    CI bench-smoke job diffs against the ``benchmarks/tuned/`` baselines)."""
+    out = bench_out_dir()
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{bench}.json"
+    doc = {
+        "format": "repro-bench-v1",
+        "bench": bench,
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path

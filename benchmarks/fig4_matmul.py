@@ -1,34 +1,48 @@
-"""Paper Fig. 4: MACs/cycle of the linear (im2col + MatMul) phase by weight
-precision, with ifmap-precision fluctuation — QntPack excluded, exactly as
-the paper isolates it.
+"""Paper Fig. 4: the linear (im2col + MatMul) phase across the precision
+matrix, plus the dispatch/autotuning sweep CI gates on.
 
-CPU analogue of "MACs/cycle": MACs / wall-us of the integer jnp path (the
-XLA program a TPU would run, minus the MXU). The paper's qualitative claims
-under test:
-  (1) 8-bit weights fastest (no unpack);
-  (2) weight precision dominates; ifmap precision is a smaller perturbation;
-  (3) loads-per-operand drops 2x/4x for 4/2-bit (the derived bytes column).
+Part 1 (the paper's figure): MACs/us of the linear phase by (weight, ifmap)
+precision with QntPack excluded, on the jnp path — the paper's qualitative
+claims: 8-bit weights fastest (no unpack), weight precision dominates, and
+loads-per-operand drops 2x/4x at 4/2-bit.
+
+Part 2 (the library gate): every one of the 27 (x, w, y) mpmm permutations
+dispatched at the Reference-Layer GEMM shape (M=256, K=288, N=64) through
+the kernel registry, timing the jnp twin and the Pallas path with static
+vs autotuned tiles. Winners persist to ``benchmarks/tuned/tiles_mpmm.json``;
+rows are emitted to ``BENCH_fig4.json`` for ``benchmarks/check_bench.py``.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from benchmarks.common import csv_row, ref_layer_macs, ref_layer_tensors, timeit
+from benchmarks.common import (
+    csv_row, emit_json, ref_layer_macs, ref_layer_tensors, timeit,
+)
+from repro.core import pack as P
 from repro.core import quant as Q
-from repro.kernels import ops, ref
+from repro.core.policy import PERMUTATIONS
+from repro.kernels import ops, tuning
+
+# Reference-Layer GEMM: 16x16 ofmap pixels x im2col(3x3x32) contraction.
+M, K, N = 256, 288, 64
+
+#: Candidate menu from the tuner's generator (static default always first —
+#: the tuned winner can only match or beat it).
+TILE_CANDIDATES = tuning.candidates("mpmm", M=M, N=N, K=K)
 
 
 def _linear_only(x_p, w_p, x_bits, w_bits):
     # im2col + MatMul with int32 accumulator output (no QntPack), jnp path
-    rq = Q.make_requant_params(y_bits=8, eps_phi=2**-10, eps_y=1.0)
-    H, W, _ = 16, 16, 32
+    H, W = 16, 16
 
     def fn(xp, wp):
         x = jnp.pad(xp, ((1, 1), (1, 1), (0, 0)))
-        from repro.core import pack as P
-
         xu = P.unpack(x, x_bits, signed=False).astype(jnp.int32)
         C = xu.shape[-1]
         cols = jnp.stack(
@@ -41,7 +55,27 @@ def _linear_only(x_p, w_p, x_bits, w_bits):
     return jax.jit(fn)
 
 
-def run():
+def _gemm_operands(x_bits: int, w_bits: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    xq = rng.randint(0, 2**x_bits, size=(M, K)).astype(np.uint8)
+    wspec = Q.WGT_SPECS[w_bits]
+    wq = rng.randint(wspec.qmin, wspec.qmax + 1, size=(N, K)).astype(np.int8)
+    return jnp.asarray(P.pack_np(xq, x_bits)), jnp.asarray(P.pack_np(wq, w_bits))
+
+
+def _mpmm_call(x_p, w_p, rq, x_bits, w_bits, y_bits, impl, tiles=None):
+    kw = dict(tiles or {})
+
+    @jax.jit
+    def fn(xp, wp):
+        return ops.mpmm(xp, wp, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
+                        impl=impl, **kw)
+
+    return functools.partial(fn, x_p, w_p)
+
+
+def run_linear_phase():
+    """Part 1 — the paper's figure proper (9 CSV rows)."""
     macs = ref_layer_macs()
     base_us = None
     for w_bits in (8, 4, 2):
@@ -56,6 +90,48 @@ def run():
                 f"fig4_linear_w{w_bits}_x{x_bits}", us,
                 f"macs_per_us={macs / us:.0f};rel_to_w8x8={base_us / us:.3f};"
                 f"loads_per_mac={loads_per_mac:.4f}")
+
+
+def run_permutation_matrix() -> list[dict]:
+    """Part 2 — all 27 mpmm permutations through dispatch + autotuner."""
+    macs = M * K * N
+    shape = tuning.shape_key(M, N, K)
+    rows = []
+    for x_bits, w_bits, y_bits in PERMUTATIONS:
+        perm = tuning.perm_key(x_bits, w_bits, y_bits)
+        x_p, w_p = _gemm_operands(x_bits, w_bits)
+        rq = Q.make_requant_params(y_bits=y_bits, eps_phi=2**-14, eps_y=1.0)
+        mk = lambda impl, tiles=None: _mpmm_call(
+            x_p, w_p, rq, x_bits, w_bits, y_bits, impl, tiles)
+
+        us_jnp = tuning.time_call(mk("jnp"), iters=5, warmup=2)
+        tiles, us_static, us_tuned = tuning.tune_and_compare(
+            "mpmm", perm=perm, shape=shape,
+            make_call=lambda tiles: mk("pallas", tiles), cand=TILE_CANDIDATES)
+        rows.append({
+            "name": f"fig4_mpmm_{perm}",
+            "op": "mpmm",
+            "perm": perm,
+            "x_bits": x_bits, "w_bits": w_bits, "y_bits": y_bits,
+            "shape": shape,
+            "tiles": tiles,
+            "us_jnp": round(us_jnp, 2),
+            "us_static": round(us_static, 2),
+            "us_tuned": round(us_tuned, 2),
+            "macs_per_us_tuned": round(macs / max(us_tuned, 1e-9), 1),
+        })
+        csv_row(
+            f"fig4_mpmm_{perm}", us_tuned,
+            f"jnp_us={us_jnp:.1f};static_us={us_static:.1f};"
+            f"tiles=bm{tiles['bm']}xbn{tiles['bn']}xbk{tiles['bk']};"
+            f"speedup_vs_static={us_static / max(us_tuned, 1e-9):.2f}")
+    return rows
+
+
+def run():
+    run_linear_phase()
+    rows = run_permutation_matrix()
+    emit_json("fig4", rows)
 
 
 if __name__ == "__main__":

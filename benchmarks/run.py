@@ -17,8 +17,13 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
+    ap.add_argument("--json-dir", default="",
+                    help="where BENCH_*.json artifacts land "
+                         "(default benchmarks/out; also via BENCH_OUT_DIR)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.json_dir:
+        os.environ["BENCH_OUT_DIR"] = args.json_dir
 
     from benchmarks import fig4_matmul, fig5_speedup, fig6_energy, lm_serving, tab1_qntpack
 

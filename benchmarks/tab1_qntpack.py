@@ -2,37 +2,76 @@
 precision. Analogue: wall-us per output element of the requant+pack op,
 plus the structural counts the paper reasons with (threshold comparisons:
 15 for 4-bit vs 3 for 2-bit -> the paper's '4-bit costs ~2x 2-bit' claim;
-8-bit uses shift+clamp, no ladder, no packing)."""
+8-bit uses shift+clamp, no ladder, no packing).
+
+Each ofmap-precision permutation is also dispatched through the registry's
+Pallas path with static vs autotuned row blocks (``tiles_qntpack.json``);
+rows land in ``BENCH_tab1.json`` for the CI bench-smoke diff.
+"""
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, timeit
+from benchmarks.common import csv_row, emit_json, timeit
 from repro.core import quant as Q
-from repro.kernels import ops
+from repro.kernels import ops, tuning
+
+M, N = 256, 64  # one Reference Layer ofmap worth of accumulators
+
+TILE_CANDIDATES = tuning.candidates("qntpack", M=M)
+
+
+def _qntpack_call(phi, rq, y_bits, impl, tiles=None):
+    kw = dict(tiles or {})
+
+    @jax.jit
+    def fn(p):
+        return ops.qntpack(p, rq, y_bits=y_bits, impl=impl, **kw)
+
+    return functools.partial(fn, phi)
 
 
 def run():
-    M, N = 256, 64  # one Reference Layer ofmap worth of accumulators
     rng = np.random.RandomState(0)
     phi = jnp.asarray(rng.randint(-(2**16), 2**16, size=(M, N)).astype(np.int32))
-    res = {}
+    shape = tuning.shape_key(M, N)
+    res, rows = {}, []
     for y_bits in (8, 4, 2):
         rq = Q.make_requant_params(y_bits=y_bits, eps_phi=2**-14, eps_y=1.0)
-        fn = jax.jit(lambda p, rq=rq, yb=y_bits: ops.qntpack(p, rq, y_bits=yb, impl="jnp"))
-        us = timeit(fn, phi)
+        us = timeit(_qntpack_call(phi, rq, y_bits, "jnp"))
         res[y_bits] = us
         n_cmp = 0 if y_bits == 8 else (1 << y_bits) - 1
         csv_row(
             f"tab1_qntpack_u{y_bits}", us,
             f"us_per_kpixel={us / (M * N / 1000):.3f};thresh_compares={n_cmp};"
             f"pack_ratio={8 // y_bits}")
+
+        perm = tuning.perm_key(y_bits=y_bits)
+        tiles, us_static, us_tuned = tuning.tune_and_compare(
+            "qntpack", perm=perm, shape=shape,
+            make_call=lambda tiles: _qntpack_call(phi, rq, y_bits, "pallas", tiles),
+            cand=TILE_CANDIDATES)
+        rows.append({
+            "name": f"tab1_qntpack_u{y_bits}",
+            "op": "qntpack",
+            "perm": perm,
+            "y_bits": y_bits,
+            "shape": shape,
+            "tiles": tiles,
+            "thresh_compares": n_cmp,
+            "us_jnp": round(us, 2),
+            "us_static": round(us_static, 2),
+            "us_tuned": round(us_tuned, 2),
+        })
     # the paper's ordering claim: 8-bit cheapest; 4-bit ~2x 2-bit ladder work
     csv_row("tab1_ratio_4b_over_2b", res[4] / res[2] * 100,
             f"paper_expects~2.0_on_ladder_ops;measured_time_ratio={res[4] / res[2]:.2f}")
+    emit_json("tab1", rows)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,6 @@
+# Root conftest: make ``pytest`` work without PYTHONPATH gymnastics — the
+# package lives under src/, tests import it as ``repro.*``.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

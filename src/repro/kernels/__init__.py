@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel package: Pallas TPU kernels for the paper's 27-permutation
+# mixed-precision library, plus the dispatch registry (dispatch.py), the
+# tile autotuner (tuning.py), and jax version shims (compat.py) that every
+# kernel module routes through.

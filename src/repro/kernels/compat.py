@@ -1,0 +1,14 @@
+"""jax version compatibility for the Pallas-TPU kernels.
+
+jax renamed the Pallas-TPU compiler-params dataclass across releases
+(``TPUCompilerParams`` on 0.4.x/0.5.x, ``CompilerParams`` on newer trees).
+Kernels import the resolved class from here instead of from ``pltpu`` so the
+shim stays scoped to this package — no monkey-patching of jax's own module
+namespace, which other libraries may probe for version detection.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 from repro.core import pack as P
 from repro.kernels.mpmm import _requant_block, _unpack_x
 
@@ -85,7 +87,7 @@ def conv2d_pallas(
         ],
         out_specs=pl.BlockSpec((1, W, Cout // ry), lambda h: (h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((H, W, Cout // ry), jnp.int8),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("arbitrary",)),
+        compiler_params=compat.CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,
         name=f"conv3x3_u{x_bits}_i{w_bits}_u{y_bits}",
     )(x_pad_p, w_p, rqv)

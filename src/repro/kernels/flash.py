@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 BIG_NEG = -2.0e9
 
 
@@ -120,7 +122,7 @@ def flash_mha_pallas(
             pltpu.VMEM((bq_,), jnp.float32),  # running denom
             pltpu.VMEM((bq_, D), jnp.float32),  # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name=f"flash_{'causal' if causal else 'full'}"

@@ -1,10 +1,10 @@
 """Public, jit-friendly entry points for the mixed-precision kernels.
 
-Each op dispatches between:
-  * ``pallas``  — the Pallas TPU kernel (interpret=True on CPU; the TPU target),
-  * ``jnp``     — the identical integer arithmetic as plain XLA ops (bit-exact
-                  vs ref.py; used for CPU training/tests and dry-run lowering,
-                  since Pallas custom calls do not lower on the CPU backend).
+Every call routes through the dispatch registry (kernels/dispatch.py): the
+permutation selects a registered ``KernelEntry`` — ``pallas`` (the Pallas TPU
+kernel; interpret=True off-TPU) or ``jnp`` (the bit-exact plain-XLA twin used
+for CPU training/tests/dry-run) — and tile shapes come from the autotuner's
+cache (kernels/tuning.py) unless the caller pins them explicitly.
 
 ``impl="auto"`` picks ``pallas`` on TPU backends and ``jnp`` elsewhere, so the
 same model code runs in every environment (DESIGN.md Sec. 6).
@@ -12,27 +12,17 @@ same model code runs in every environment (DESIGN.md Sec. 6).
 
 from __future__ import annotations
 
-import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pack as P
 from repro.core import quant as Q
-from repro.kernels import ref
-from repro.kernels.conv2d import conv2d_pallas
-from repro.kernels.mpmm import mpmm_pallas, requant_vector
-from repro.kernels.qntpack import qntpack_pallas
+from repro.kernels import dispatch, tuning
+from repro.kernels.mpmm import requant_vector
 
 Impl = Literal["auto", "pallas", "jnp"]
-
-
-def _resolve(impl: Impl) -> str:
-    if impl != "auto":
-        return impl
-    return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
 def _interpret() -> bool:
@@ -49,6 +39,10 @@ def _pad_axis(a: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(a, widths)
 
 
+def _ceil(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
 def mpmm(
     x_p: jax.Array,  # (M, K/rx) packed unsigned ifmaps
     w_p: jax.Array,  # (N, K/rw) packed signed weights
@@ -61,37 +55,46 @@ def mpmm(
     out_kind: str = "packed",
     out_scale: float | jax.Array = 1.0,
     impl: Impl = "auto",
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
 ) -> jax.Array:
-    """The paper's MatMul + fused QntPack over any of the 27 permutations."""
+    """The paper's MatMul + fused QntPack over any of the 27 permutations.
+
+    bm/bn/bk default to the autotuned tiles for this (permutation, shape)
+    cell — benchmarks/tuned/tiles_mpmm.json — falling back to the static
+    defaults when untuned. Pass explicit values to pin a block shape.
+    """
     if rq is None:
         rq = Q.make_requant_params(y_bits=y_bits, eps_phi=2**-8, eps_y=1.0)
-    if _resolve(impl) == "jnp":
-        return ref.mpmm_ref(
-            x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
-            x_signed=x_signed, out_kind=out_kind, out_scale=out_scale,
+    entry = dispatch.lookup("mpmm", x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(
+            x_p, w_p, rq, x_signed=x_signed, out_kind=out_kind, out_scale=out_scale
         )
     rx, rw, ry = P.pack_ratio(x_bits), P.pack_ratio(w_bits), P.pack_ratio(y_bits)
     M, N, K = x_p.shape[0], w_p.shape[0], x_p.shape[1] * rx
-    bm_, bn_, bk_ = min(bm, _ceil(M, 8)), min(bn, _ceil(N, 128)), min(bk, _ceil(K, 128))
+    t = tuning.resolve_tiles(
+        "mpmm",
+        perm=tuning.perm_key(x_bits, w_bits, y_bits),
+        shape=tuning.shape_key(M, N, K),
+        overrides={"bm": bm, "bn": bn, "bk": bk},
+    )
+    bm_ = min(t["bm"], _ceil(M, 8))
+    bn_ = min(t["bn"], _ceil(N, 128))
+    bk_ = min(t["bk"], _ceil(K, 128))
     xp = _pad_axis(_pad_axis(x_p, 0, bm_), 1, bk_ // rx)
     wp = _pad_axis(_pad_axis(w_p, 0, bn_), 1, bk_ // rw)
     rqv = requant_vector(rq)
     scale = jnp.asarray(out_scale, jnp.float32).reshape(1)
-    y = mpmm_pallas(
+    y = entry.fn(
         xp, wp, rqv, scale,
-        x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, x_signed=x_signed,
-        out_kind=out_kind, bm=bm_, bn=bn_, bk=bk_, interpret=_interpret(),
+        x_signed=x_signed, out_kind=out_kind,
+        bm=bm_, bn=bn_, bk=bk_, interpret=_interpret(),
     )
     if out_kind == "packed":
         return y[:M, : N // ry]
     return y[:M, :N]
-
-
-def _ceil(n: int, mult: int) -> int:
-    return ((n + mult - 1) // mult) * mult
 
 
 def qntpack(
@@ -100,16 +103,20 @@ def qntpack(
     *,
     y_bits: int,
     impl: Impl = "auto",
-    bm: int = 256,
+    bm: Optional[int] = None,
 ) -> jax.Array:
-    if _resolve(impl) == "jnp":
-        return ref.qntpack_ref(phi, rq, y_bits=y_bits)
+    entry = dispatch.lookup("qntpack", y_bits=y_bits, impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(phi, rq)
     M, N = phi.shape
-    bm_ = min(bm, _ceil(M, 8))
+    t = tuning.resolve_tiles(
+        "qntpack", perm=tuning.perm_key(y_bits=y_bits),
+        shape=tuning.shape_key(M, N), overrides={"bm": bm},
+    )
+    bm_ = min(t["bm"], _ceil(M, 8))
     ry = P.pack_ratio(y_bits)
     phip = _pad_axis(phi, 0, bm_)
-    y = qntpack_pallas(phip, requant_vector(rq), y_bits=y_bits, bm=bm_,
-                       interpret=_interpret())
+    y = entry.fn(phip, requant_vector(rq), bm=bm_, interpret=_interpret())
     return y[:M, : N // ry]
 
 
@@ -124,13 +131,11 @@ def conv2d(
     impl: Impl = "auto",
 ) -> jax.Array:
     """3x3/s1/p1 HWC conv (the paper's Reference Layer shape family)."""
-    if _resolve(impl) == "jnp":
-        return ref.conv2d_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits)
+    entry = dispatch.lookup("conv2d", x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(x_p, w_p, rq)
     x_pad = jnp.pad(x_p, ((1, 1), (1, 1), (0, 0)))  # quantized zero == 0.0
-    return conv2d_pallas(
-        x_pad, w_p, requant_vector(rq),
-        x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, interpret=_interpret(),
-    )
+    return entry.fn(x_pad, w_p, requant_vector(rq), interpret=_interpret())
 
 
 def wdqmm(
@@ -140,24 +145,29 @@ def wdqmm(
     *,
     w_bits: int,
     impl: Impl = "auto",
-    bm: int = 256,
-    bn: int = 256,
-    bk: int = 512,
+    bm: Optional[int] = None,
+    bn: Optional[int] = None,
+    bk: Optional[int] = None,
 ) -> jax.Array:
     """Weight-only dequant matmul (decode GEMV path)."""
-    from repro.kernels.wdqmm import wdqmm_pallas, wdqmm_ref
-
-    if _resolve(impl) == "jnp":
-        return wdqmm_ref(x, w_p, jnp.asarray(eps_w, jnp.float32), w_bits=w_bits)
+    entry = dispatch.lookup("wdqmm", w_bits=w_bits, impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(x, w_p, jnp.asarray(eps_w, jnp.float32))
     rw = P.pack_ratio(w_bits)
     M, K = x.shape
     N = w_p.shape[0]
-    bm_, bn_, bk_ = min(bm, _ceil(M, 8)), min(bn, _ceil(N, 128)), min(bk, _ceil(K, 128))
+    t = tuning.resolve_tiles(
+        "wdqmm", perm=tuning.perm_key(w_bits=w_bits),
+        shape=tuning.shape_key(M, N, K),
+        overrides={"bm": bm, "bn": bn, "bk": bk},
+    )
+    bm_ = min(t["bm"], _ceil(M, 8))
+    bn_ = min(t["bn"], _ceil(N, 128))
+    bk_ = min(t["bk"], _ceil(K, 128))
     xp = _pad_axis(_pad_axis(x, 0, bm_), 1, bk_)
     wp = _pad_axis(_pad_axis(w_p, 0, bn_), 1, bk_ // rw)
-    y = wdqmm_pallas(xp, wp, jnp.asarray(eps_w, jnp.float32).reshape(1),
-                     w_bits=w_bits, bm=bm_, bn=bn_, bk=bk_,
-                     interpret=_interpret())
+    y = entry.fn(xp, wp, jnp.asarray(eps_w, jnp.float32).reshape(1),
+                 bm=bm_, bn=bn_, bk=bk_, interpret=_interpret())
     return y[:M, :N]
 
 

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 from repro.core import pack as P
 from repro.kernels.mpmm import _requant_block
 
@@ -44,7 +46,7 @@ def qntpack_pallas(
         ],
         out_specs=pl.BlockSpec((bm, N // ry), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((M, N // ry), jnp.int8),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=compat.CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
         name=f"qntpack_u{y_bits}",
     )(phi, rqv)

@@ -266,6 +266,10 @@ def _scan_groups(cfg: ArchConfig) -> list[tuple[str, int]]:
 
 def init_params(key: jax.Array, cfg: ArchConfig, policy: PrecisionPolicy, *,
                 mode: str = "train", dtype=jnp.bfloat16) -> dict:
+    if mode == "serve":
+        # serve-mode params exist only to feed the integer kernels — reject a
+        # policy that addresses unregistered cells before allocating anything
+        ops.dispatch.ensure_policy_supported(policy)
     ninit, _ = _norm_fns(cfg)
     ke, kh, kb, ks, km = jax.random.split(key, 5)
     params: dict = {

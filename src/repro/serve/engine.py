@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import PrecisionPolicy
+from repro.kernels import dispatch
 from repro.models import model as M
 from repro.models.model import ArchConfig
 
@@ -54,6 +55,9 @@ class ServeEngine:
                  n_slots: int = 4, s_max: int = 64, impl="auto",
                  greedy: bool = True):
         self.params, self.cfg, self.policy = params, cfg, policy
+        # fail at construction, not mid-decode, if the policy needs a kernel
+        # cell outside the registered 27-permutation library
+        dispatch.ensure_policy_supported(policy)
         self.n_slots, self.s_max = n_slots, s_max
         self.caches = M.init_cache(cfg, policy, n_slots, s_max)
         self.slot_pos = np.zeros(n_slots, np.int32)  # next write position
@@ -61,11 +65,32 @@ class ServeEngine:
         self.slot_remaining = np.zeros(n_slots, np.int32)
         self.monitor = StepMonitor()
         self.impl = impl
+        self._dispatch_start = dict(dispatch.DISPATCH_COUNTS)
 
         self._decode = jax.jit(
             lambda p, tok, pos, caches: M.decode_step(
                 p, tok, pos, caches, cfg, policy, impl=impl),
             static_argnames=())
+
+    # --- kernel-matrix observability --------------------------------------
+
+    def kernel_cells(self) -> list[str]:
+        """The library cells this engine's precision policy routes through."""
+        return [str(k) for k in dispatch.cells_for_policy(self.policy)]
+
+    def kernel_stats(self) -> dict[str, int]:
+        """Which cells of the 27-permutation matrix were exercised since this
+        engine's construction. Two caveats: dispatch happens at jit *trace*
+        time, so treat counts as a coverage signal (cell was hit / retraced),
+        not call volume; and the underlying counters are process-wide deltas,
+        so other engines or direct ops.* calls in the same process also
+        appear here."""
+        out: dict[str, int] = {}
+        for k, v in dispatch.DISPATCH_COUNTS.items():
+            d = v - self._dispatch_start.get(k, 0)
+            if d > 0:  # guard: counters may have been reset mid-lifetime
+                out[str(k)] = d
+        return dict(sorted(out.items()))
 
     # --- request lifecycle -------------------------------------------------
 

@@ -1,0 +1,189 @@
+"""The dispatch registry is the library: coverage of all 27 permutations,
+bit-exactness of every dispatched cell against the ref.py oracles, tile
+resolution precedence, and policy-level coverage validation.
+
+This module is the fast-tier gate on the kernel matrix (small shapes only);
+the heavy per-kernel sweeps in test_kernels.py are the nightly tier.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack as P
+from repro.core import quant as Q
+from repro.core.policy import BITS, PERMUTATIONS, get_policy
+from repro.kernels import dispatch, ops, ref, tuning
+
+jax.config.update("jax_platform_name", "cpu")
+
+RNG = np.random.RandomState(7)
+
+
+# ------------------------------------------------------------------ coverage
+
+
+def test_registry_covers_all_27_permutations():
+    """Every (x_bits, w_bits, y_bits) cell exists for mpmm and conv2d, on
+    both backends — the paper's 'library of 27 kernels' as an invariant."""
+    assert len(PERMUTATIONS) == 27
+    for op in ("mpmm", "conv2d"):
+        for impl in dispatch.IMPLS:
+            assert dispatch.coverage(op, impl) == set(PERMUTATIONS), (op, impl)
+    for impl in dispatch.IMPLS:
+        assert {c[2] for c in dispatch.coverage("qntpack", impl)} == set(BITS)
+        assert {c[1] for c in dispatch.coverage("wdqmm", impl)} == set(BITS)
+
+
+def test_import_time_validation_passes_and_detects_holes():
+    dispatch.validate_coverage()  # the real registry is complete
+    # a hole is loud: simulate one by peeking at a scratch copy of the table
+    key = dispatch.KernelKey("mpmm", 8, 8, 8, "pallas")
+    entry = dispatch._REGISTRY.pop(key)
+    try:
+        with pytest.raises(RuntimeError, match=r"mpmm\[8_8_8\]@pallas"):
+            dispatch.validate_coverage()
+    finally:
+        dispatch._REGISTRY[key] = entry
+
+
+def test_unregistered_cell_raises_keyerror():
+    with pytest.raises(KeyError, match="outside the library"):
+        dispatch.lookup("mpmm", x_bits=3, w_bits=8, y_bits=8, impl="jnp")
+    with pytest.raises(KeyError):
+        dispatch.lookup("nosuchop", impl="jnp")
+
+
+def test_dispatch_counts_observe_traffic():
+    dispatch.reset_dispatch_counts()
+    dispatch.lookup("mpmm", x_bits=8, w_bits=4, y_bits=8, impl="jnp")
+    dispatch.lookup("mpmm", x_bits=8, w_bits=4, y_bits=8, impl="jnp")
+    stats = dispatch.dispatch_stats()
+    assert stats == {"mpmm[8_4_8]@jnp": 2}
+    dispatch.reset_dispatch_counts()
+
+
+# ----------------------------------------------------- bit-exact dispatch
+
+
+@pytest.mark.parametrize("x_bits,w_bits,y_bits", PERMUTATIONS)
+def test_dispatched_mpmm_bit_identical_to_ref(x_bits, w_bits, y_bits):
+    """Each of the 27 dispatched cells equals the kernels/ref.py oracle on a
+    small shape, on both backends."""
+    m, k, n = 8, 32, 16
+    xs = Q.ACT_SPECS[x_bits]
+    xq = RNG.randint(xs.qmin, xs.qmax + 1, size=(m, k)).astype(np.uint8)
+    ws = Q.WGT_SPECS[w_bits]
+    wq = RNG.randint(ws.qmin, ws.qmax + 1, size=(n, k)).astype(np.int8)
+    x_p, w_p = jnp.asarray(P.pack_np(xq, x_bits)), jnp.asarray(P.pack_np(wq, w_bits))
+    rq = Q.make_requant_params(y_bits=y_bits, kappa=1.3, lam=2.0,
+                               eps_phi=2.0**-6, eps_y=1.0)
+    want = np.asarray(ref.mpmm_ref(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits,
+                                   y_bits=y_bits))
+    for impl in dispatch.IMPLS:
+        got = ops.mpmm(x_p, w_p, rq, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits,
+                       impl=impl, bm=8, bn=16, bk=32)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=impl)
+
+
+def test_dispatched_conv2d_and_qntpack_and_wdqmm_match_ref():
+    rq = Q.make_requant_params(y_bits=4, eps_phi=2.0**-8, eps_y=1.0)
+    xq = RNG.randint(0, 4, size=(6, 6, 16)).astype(np.uint8)
+    wq = RNG.randint(-2, 2, size=(16, 144)).astype(np.int8)
+    x_p, w_p = jnp.asarray(P.pack_np(xq, 2)), jnp.asarray(P.pack_np(wq, 2))
+    want = np.asarray(ref.conv2d_ref(x_p, w_p, rq, x_bits=2, w_bits=2, y_bits=4))
+    for impl in dispatch.IMPLS:
+        got = ops.conv2d(x_p, w_p, rq, x_bits=2, w_bits=2, y_bits=4, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=impl)
+
+    phi = jnp.asarray(RNG.randint(-(2**15), 2**15, size=(16, 32)).astype(np.int32))
+    want = np.asarray(ref.qntpack_ref(phi, rq, y_bits=4))
+    for impl in dispatch.IMPLS:
+        got = ops.qntpack(phi, rq, y_bits=4, impl=impl, bm=8)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=impl)
+
+    x = jnp.asarray(RNG.randn(8, 32).astype(np.float32))
+    wq4 = RNG.randint(-8, 8, size=(16, 32)).astype(np.int8)
+    w_p4 = jnp.asarray(P.pack_np(wq4, 4))
+    a = np.asarray(ops.wdqmm(x, w_p4, 0.05, w_bits=4, impl="jnp"))
+    b = np.asarray(ops.wdqmm(x, w_p4, 0.05, w_bits=4, impl="pallas", bm=8, bn=16, bk=32))
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=0.02 * np.abs(a).max())
+
+
+# ------------------------------------------------------------- tile tuning
+
+
+def test_resolve_tiles_precedence(tmp_path, monkeypatch):
+    """overrides > tuned-cache winner > static defaults."""
+    monkeypatch.setenv("REPRO_TUNED_DIR", str(tmp_path))
+    tuning.reset_caches()
+    try:
+        perm, shape = tuning.perm_key(8, 4, 8), tuning.shape_key(64, 32, 128)
+        static = tuning.resolve_tiles("mpmm", perm=perm, shape=shape)
+        assert static == tuning.STATIC_DEFAULTS["mpmm"]
+
+        tuning.get_cache("mpmm").put(perm, shape, {"bm": 32, "bn": 64, "bk": 128}, 12.5)
+        cached = tuning.resolve_tiles("mpmm", perm=perm, shape=shape)
+        assert cached == {"bm": 32, "bn": 64, "bk": 128}
+        # a different shape/permutation is unaffected
+        other = tuning.resolve_tiles("mpmm", perm=perm, shape=tuning.shape_key(8, 8, 64))
+        assert other == tuning.STATIC_DEFAULTS["mpmm"]
+
+        over = tuning.resolve_tiles("mpmm", perm=perm, shape=shape,
+                                    overrides={"bm": 8, "bn": None, "bk": None})
+        assert over == {"bm": 8, "bn": 64, "bk": 128}
+
+        # persisted to disk in the documented format (backend-namespaced:
+        # interpret-mode winners must never leak onto a real TPU)
+        doc = json.loads((tmp_path / "tiles_mpmm.json").read_text())
+        assert doc["format"] == tuning.CACHE_FORMAT and doc["op"] == "mpmm"
+        assert f"{tuning.backend()}/{perm}/{shape}" in doc["entries"]
+    finally:
+        tuning.reset_caches()
+
+
+def test_autotune_winner_includes_static_default(tmp_path, monkeypatch):
+    """The static default is always a candidate, so the tuned winner can
+    only match or beat it (the CI bench gate relies on this invariant)."""
+    monkeypatch.setenv("REPRO_TUNED_DIR", str(tmp_path))
+    tuning.reset_caches()
+    try:
+        cand = tuning.candidates("mpmm", M=32, N=32, K=64)
+        assert cand[0] == tuning.STATIC_DEFAULTS["mpmm"]
+        assert all(set(c) == {"bm", "bn", "bk"} for c in cand)
+
+        calls = []
+
+        def make_call(tiles):
+            def fn():
+                calls.append(dict(tiles))
+                return jnp.zeros(())
+            return fn
+
+        entry = tuning.autotune("mpmm", perm="u8_i8_u8", shape="M32_N32_K64",
+                                make_call=make_call, cand=cand, iters=1, warmup=0)
+        assert {k: entry[k] for k in ("bm", "bn", "bk")} in cand
+        assert dict(tuning.STATIC_DEFAULTS["mpmm"]) in calls
+        # second call is a cache hit: no re-timing
+        n_calls = len(calls)
+        again = tuning.autotune("mpmm", perm="u8_i8_u8", shape="M32_N32_K64",
+                                make_call=make_call, cand=cand)
+        assert len(calls) == n_calls and again == entry
+    finally:
+        tuning.reset_caches()
+
+
+# -------------------------------------------------------------- policy glue
+
+
+def test_cells_for_policy_and_validation():
+    cells = dispatch.cells_for_policy(get_policy("mixed_paper"))
+    ops_hit = {c.op for c in cells}
+    assert ops_hit == {"mpmm"}
+    assert all((c.x_bits, c.w_bits, 8) in set(PERMUTATIONS)
+               or c.y_bits == 8 for c in cells)
+    dispatch.ensure_policy_supported(get_policy("w4a8"))  # no raise
+    dispatch.ensure_policy_supported(get_policy("bf16"))  # no quantized cells

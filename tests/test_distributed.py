@@ -8,6 +8,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # spawns 8-device subprocesses; nightly tier
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

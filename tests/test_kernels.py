@@ -37,6 +37,7 @@ def rand_rq(y_bits, k, x_bits, w_bits):
     )
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("x_bits,w_bits,y_bits", PERMUTATIONS)
 def test_mpmm_all_27_permutations(x_bits, w_bits, y_bits):
     """The paper's 27-kernel matrix: Pallas == oracle, bit exact."""
@@ -127,6 +128,7 @@ def test_mpmm_signed_x_variant(x_bits):
         np.testing.assert_array_equal(np.asarray(got), want.astype(np.int32))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("w_bits", [8, 4, 2])
 @pytest.mark.parametrize("m,k,n,bm,bn,bk", [
     (8, 128, 64, 8, 32, 64),
@@ -147,6 +149,7 @@ def test_wdqmm_weight_only_dequant_matmul(w_bits, m, k, n, bm, bn, bk):
                                rtol=2e-2, atol=0.02 * np.abs(want).max())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("bm,bn,bk", [(8, 16, 32), (16, 32, 64), (8, 32, 32)])
 def test_mpmm_block_shape_sweep(bm, bn, bk):
     """Blocking must never change results (VMEM tiling invariance)."""
@@ -170,6 +173,7 @@ def test_qntpack_kernel(y_bits):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("x_bits,w_bits,y_bits", [
     (8, 8, 8), (8, 4, 8), (8, 2, 8), (4, 8, 4), (4, 4, 2), (2, 2, 4), (2, 8, 2),
 ])
