@@ -14,6 +14,12 @@ Checks, per benchmark:
      numbers come from the same process on the same machine, so this holds
      across runner speeds; tol absorbs timer noise.
 
+``lm_serving`` is gated by structural invariants instead of tiles: every
+(arch, policy) byte-accounting row present, quantized policies never cost
+more HBM bytes/token than bf16 (and w4a8 <= w8a8), and the serving engine's
+chunked prefill must (a) decode bit-identically to the token-by-token path
+and (b) cut jitted calls per admission by >= its declared factor.
+
 Absolute microseconds are intentionally NOT gated: CI runners vary too much.
 Exit code 0 = green, 1 = any check failed (report on stdout).
 """
@@ -46,9 +52,57 @@ def _expected_perms() -> dict[str, set[str]]:
     }
 
 
+def check_lm_serving(out_dir: pathlib.Path) -> list[str]:
+    from benchmarks import lm_serving
+    from repro import configs
+
+    doc = _load(out_dir / "BENCH_lm_serving.json")
+    rows = doc.get("rows", [])
+    errors: list[str] = []
+
+    # 1. coverage: every (arch, policy) byte-accounting row
+    bytes_rows = {(r["arch"], r["policy"]): r for r in rows
+                  if r.get("kind") == "decode_bytes"}
+    want = {(a, p) for a in configs.ARCHS for p in lm_serving.POLICY_NAMES}
+    missing = want - set(bytes_rows)
+    if missing:
+        errors.append(f"lm_serving: missing decode_bytes rows: {sorted(missing)}")
+
+    # 2. packed-representation invariant: quantization can only shrink the
+    # per-token HBM traffic the policy's packed layout implies
+    for arch in sorted(configs.ARCHS):
+        gb = {p: bytes_rows[(arch, p)]["gb_per_token"]
+              for p in lm_serving.POLICY_NAMES if (arch, p) in bytes_rows}
+        for lo, hi in (("w8a8", "bf16"), ("w4a8", "w8a8"), ("mixed_paper", "bf16")):
+            if lo in gb and hi in gb and gb[lo] > gb[hi]:
+                errors.append(
+                    f"lm_serving/{arch}: {lo} bytes/token {gb[lo]} > "
+                    f"{hi} {gb[hi]} — packed accounting regressed")
+
+    # 3. serving engine: chunked prefill correctness + call-count win
+    serve = [r for r in rows if r.get("kind") == "serve_prefill"]
+    if not serve:
+        errors.append("lm_serving: missing serve_prefill row")
+    for r in serve:
+        if not r.get("tokens_match"):
+            errors.append(
+                f"lm_serving/{r['name']}: chunked prefill decoded different "
+                f"tokens than the token-by-token baseline")
+        if r["call_reduction"] < lm_serving.MIN_CALL_REDUCTION:
+            errors.append(
+                f"lm_serving/{r['name']}: prefill call reduction "
+                f"{r['call_reduction']}x < {lm_serving.MIN_CALL_REDUCTION}x "
+                f"({r['prefill_calls_chunked']} chunked vs "
+                f"{r['prefill_calls_stepwise']} stepwise jitted calls)")
+    return errors
+
+
 def check_bench(bench: str, out_dir: pathlib.Path, tuned_dir: pathlib.Path,
                 tol: float) -> list[str]:
     from repro.kernels import tuning
+
+    if bench == "lm_serving":
+        return check_lm_serving(out_dir)
 
     doc = _load(out_dir / f"BENCH_{bench}.json")
     rows = {r["perm"]: r for r in doc.get("rows", [])}

@@ -1,15 +1,32 @@
-"""Beyond-paper benchmark: the paper's technique at LM scale — HBM bytes
-per decoded token under each precision policy (weights + KV cache), the
-quantity that bounds decode latency on v5e (decode is memory-roofline).
+"""Beyond-paper benchmark: the paper's technique at LM scale.
 
-Derived analytically from the arch configs (exact byte accounting of the
-packed representation); v5e-projected tokens/s/chip = HBM_BW / bytes."""
+Part 1 (analytic): HBM bytes per decoded token under each precision policy
+(weights + KV cache), the quantity that bounds decode latency on v5e (decode
+is memory-roofline). Derived exactly from the arch configs' packed layout;
+v5e-projected tokens/s/chip = HBM_BW / bytes.
+
+Part 2 (measured): the serving engine's prefill path — batched/chunked
+prefill (``serve.prefill.ChunkedPrefill``) vs the token-by-token baseline on
+the same prompts, counting jitted calls per admission and TTFT, and checking
+the decoded tokens match bit-for-bit. Rows land in ``BENCH_lm_serving.json``
+so ``check_bench.py`` gates both the byte-accounting invariants and the
+prefill-speedup claim (stepwise >= 5x the chunked call count).
+"""
 
 from __future__ import annotations
 
-from benchmarks.common import HBM_BW, csv_row
+from benchmarks.common import HBM_BW, csv_row, emit_json
 from repro import configs
 from repro.core.policy import get_policy
+
+#: Policies every arch is accounted under (check_bench coverage set).
+POLICY_NAMES = ("bf16", "w8a8", "w4a8", "mixed_paper")
+
+#: The measured serving comparison (check_bench gates >= this call reduction).
+SERVE_ARCH = "internlm2-1.8b"
+SERVE_PROMPT_LEN = 40
+SERVE_CHUNK = 8
+MIN_CALL_REDUCTION = 5.0
 
 
 def _weight_bytes(cfg, policy) -> float:
@@ -54,16 +71,82 @@ def _kv_bytes(cfg, policy, seq: int) -> float:
     return cfg.n_layers * eff_seq * cfg.kv_heads * cfg.head_dim * 2 * bits / 8
 
 
-def run():
+def run_decode_bytes() -> list[dict]:
     seq = 32_768
+    rows = []
     for arch_id in sorted(configs.ARCHS):
         cfg = configs.get_arch(arch_id)
-        for pol in ("bf16", "w8a8", "w4a8", "mixed_paper"):
+        for pol in POLICY_NAMES:
             policy = get_policy(pol)
             b = _weight_bytes(cfg, policy) + _kv_bytes(cfg, policy, seq)
             tps = HBM_BW / b  # per chip, batch 1 bound
+            rows.append({
+                "name": f"lm_decode_bytes_{arch_id}_{pol}",
+                "kind": "decode_bytes",
+                "arch": arch_id,
+                "policy": pol,
+                "gb_per_token": round(b / 1e9, 6),
+                "v5e_tokens_per_s": round(tps, 2),
+            })
             csv_row(f"lm_decode_bytes_{arch_id}_{pol}", 0.0,
                     f"GB_per_token={b / 1e9:.3f};v5e_tokens_per_s={tps:.1f}")
+    return rows
+
+
+def run_serve_prefill() -> list[dict]:
+    """Measured: chunked vs stepwise prefill on the smoke-size engine."""
+    import jax
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
+    policy = get_policy("w4a8")
+    params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, size=SERVE_PROMPT_LEN).astype(np.int32)
+               for _ in range(2)]
+
+    def drive(mode):
+        eng = ServeEngine(params, cfg, policy, n_slots=2,
+                          s_max=SERVE_PROMPT_LEN + 8, impl="jnp",
+                          prefill=mode, prefill_chunk=SERVE_CHUNK)
+        out = eng.run([Request(rid=i, prompt=p.copy(), max_new=4)
+                       for i, p in enumerate(prompts)])
+        return out, eng.metrics()
+
+    out_c, m_c = drive("chunked")
+    out_s, m_s = drive("stepwise")
+    reduction = m_s["prefill_jit_calls"] / max(m_c["prefill_jit_calls"], 1)
+    row = {
+        "name": "lm_serve_prefill",
+        "kind": "serve_prefill",
+        "arch": cfg.name,
+        "policy": policy.name,
+        "prompt_len": SERVE_PROMPT_LEN,
+        "chunk": SERVE_CHUNK,
+        "n_requests": len(prompts),
+        "prefill_calls_chunked": m_c["prefill_jit_calls"],
+        "prefill_calls_stepwise": m_s["prefill_jit_calls"],
+        "call_reduction": round(reduction, 2),
+        "ttft_avg_chunked_s": round(m_c["ttft_avg_s"], 4),
+        "ttft_avg_stepwise_s": round(m_s["ttft_avg_s"], 4),
+        "tokens_per_s_chunked": round(m_c["tokens_per_s"], 2),
+        "tokens_per_s_stepwise": round(m_s["tokens_per_s"], 2),
+        "tokens_match": out_c == out_s,
+    }
+    csv_row("lm_serve_prefill", m_c["ttft_avg_s"] * 1e6,
+            f"calls_chunked={row['prefill_calls_chunked']};"
+            f"calls_stepwise={row['prefill_calls_stepwise']};"
+            f"reduction={reduction:.1f}x;tokens_match={row['tokens_match']}")
+    return [row]
+
+
+def run():
+    rows = run_decode_bytes()
+    rows += run_serve_prefill()
+    emit_json("lm_serving", rows)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Batched serving example: continuous batching over the integer serving
-path (packed weights + quantized KV cache) with per-slot cache positions.
+path (packed weights + quantized KV cache) with per-slot cache positions,
+batched/chunked prefill, and a pluggable admission scheduler.
 
 Run: PYTHONPATH=src python examples/serve_batched.py --requests 6
+CI smoke: PYTHONPATH=src python examples/serve_batched.py --requests 4 --impl jnp
 """
 
 import argparse
@@ -12,7 +14,7 @@ import numpy as np
 from repro import configs
 from repro.core.policy import get_policy
 from repro.models import model as M
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import Request, ServeEngine
 
 
 def main():
@@ -22,6 +24,13 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--impl", default="auto", choices=("auto", "pallas", "jnp"))
+    ap.add_argument("--scheduler", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--prefill", default="auto",
+                    choices=("auto", "chunked", "stepwise"))
+    ap.add_argument("--chunk", type=int, default=16,
+                    help="chunked-prefill chunk size (jitted calls per "
+                         "admission = ceil(prompt_len / chunk))")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -31,7 +40,9 @@ def main():
                  if "w_packed" in str(k))
     print(f"arch={cfg.name} policy={policy.name} packed-weight bytes={packed}")
 
-    eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=64)
+    eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=64,
+                      impl=args.impl, scheduler=args.scheduler,
+                      prefill=args.prefill, prefill_chunk=args.chunk)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(1, cfg.vocab, size=rng.randint(2, 6)).astype(np.int32),
@@ -40,7 +51,12 @@ def main():
     out = eng.run(reqs, on_token=lambda rid, t: None)
     for rid in sorted(out):
         print(f"req {rid}: {out[rid]}")
-    print(f"steps ema={eng.monitor.ema*1e3:.1f}ms stragglers={eng.monitor.stragglers}")
+    m = eng.metrics()
+    print(f"metrics: prefill={m['prefill_mode']}(chunk={m['prefill_chunk']}, "
+          f"{m['prefill_jit_calls']} jit calls) scheduler={m['scheduler']} "
+          f"decode_steps={m['decode_steps']} tokens/s={m['tokens_per_s']:.1f} "
+          f"ttft_avg={m['ttft_avg_s']*1e3:.1f}ms slot_resets={m['slot_resets']} "
+          f"stragglers={m['stragglers']}")
 
 
 if __name__ == "__main__":

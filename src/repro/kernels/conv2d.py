@@ -29,35 +29,43 @@ def _conv2d_kernel(
     x_ref,  # (H+2, W+2, C/rx) packed, whole padded ifmap (VMEM-resident)
     w_ref,  # (Cout, 9*C/rw) packed, (dy, dx, c) order
     rqv_ref,  # SMEM requant vector
-    o_ref,  # (1, W, Cout/ry) packed output row
+    o_ref,  # (bh, W, Cout/ry) packed output row block
     *,
     x_bits: int,
     w_bits: int,
     y_bits: int,
     W: int,
+    bh: int,
 ):
     h = pl.program_id(0)
-    rows_p = x_ref[pl.ds(h, 3), :, :]  # (3, W+2, C/rx) packed window
-    xs, x_off = _unpack_x(rows_p, x_bits)  # (3, W+2, C) s8
+    rows_p = x_ref[pl.ds(h * bh, bh + 2), :, :]  # (bh+2, W+2, C/rx) packed
+    xs, x_off = _unpack_x(rows_p, x_bits)  # (bh+2, W+2, C) s8
     C = xs.shape[-1]
-    # im2col for one output row: (W, 3, 3, C) in (dy, dx, c) order.
-    cols = jnp.stack(
+    # im2col for bh output rows: (bh*W, 9C) in (dy, dx, c) order — a taller
+    # MXU call per grid step (the autotuned row-block trade-off: fewer grid
+    # iterations and dot calls vs a larger live im2col block).
+    cols = jnp.concatenate(
         [
-            jnp.stack([xs[dy, dx : dx + W, :] for dx in range(3)], axis=1)
-            for dy in range(3)
+            jnp.stack(
+                [
+                    jnp.stack([xs[r + dy, dx : dx + W, :] for dx in range(3)], axis=1)
+                    for dy in range(3)
+                ],
+                axis=1,
+            ).reshape(W, 9 * C)
+            for r in range(bh)
         ],
-        axis=1,
-    )  # (W, 3, 3, C)
-    cols = cols.reshape(W, 9 * C)
+        axis=0,
+    )  # (bh*W, 9C)
     w = P.unpack(w_ref[...], w_bits, signed=True)  # (Cout, 9C) s8
     phi = jax.lax.dot_general(
         cols, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
-    )  # (W, Cout)
+    )  # (bh*W, Cout)
     if x_off:
         wsum = jnp.sum(w.astype(jnp.int32), axis=1)  # (Cout,)
         phi = phi + x_off * wsum[None, :]
-    y = _requant_block(phi, rqv_ref, y_bits)  # (W, Cout) uint8
-    o_ref[...] = P.pack(y, y_bits)[None]
+    y = _requant_block(phi, rqv_ref, y_bits)  # (bh*W, Cout) uint8
+    o_ref[...] = P.pack(y, y_bits).reshape(bh, W, -1)
 
 
 def conv2d_pallas(
@@ -68,6 +76,7 @@ def conv2d_pallas(
     x_bits: int,
     w_bits: int,
     y_bits: int,
+    bh: int = 1,
     interpret: bool = True,
 ) -> jax.Array:
     Hp, Wp, Cp = x_pad_p.shape
@@ -75,17 +84,20 @@ def conv2d_pallas(
     Cout = w_p.shape[0]
     ry = P.pack_ratio(y_bits)
     assert Cout % ry == 0
+    if H % bh:
+        raise ValueError(f"bh={bh} must divide H={H} (ops.conv2d clamps)")
     return pl.pallas_call(
         functools.partial(
-            _conv2d_kernel, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, W=W
+            _conv2d_kernel, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, W=W,
+            bh=bh,
         ),
-        grid=(H,),
+        grid=(H // bh,),
         in_specs=[
             pl.BlockSpec((Hp, Wp, Cp), lambda h: (0, 0, 0)),  # resident ifmap
             pl.BlockSpec(w_p.shape, lambda h: (0, 0)),  # resident weights
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, W, Cout // ry), lambda h: (h, 0, 0)),
+        out_specs=pl.BlockSpec((bh, W, Cout // ry), lambda h: (h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((H, W, Cout // ry), jnp.int8),
         compiler_params=compat.CompilerParams(dimension_semantics=("arbitrary",)),
         interpret=interpret,

@@ -244,6 +244,7 @@ def _register_library() -> None:
             "conv2d", x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl="pallas",
             fn=functools.partial(conv2d_pallas, x_bits=x_bits, w_bits=w_bits, y_bits=y_bits),
             name=f"conv3x3_u{x_bits}_i{w_bits}_u{y_bits}",
+            tunable=("bh",),
         )
         register(
             "conv2d", x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl="jnp",

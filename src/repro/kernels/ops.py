@@ -129,13 +129,30 @@ def conv2d(
     w_bits: int,
     y_bits: int,
     impl: Impl = "auto",
+    bh: Optional[int] = None,
 ) -> jax.Array:
-    """3x3/s1/p1 HWC conv (the paper's Reference Layer shape family)."""
+    """3x3/s1/p1 HWC conv (the paper's Reference Layer shape family).
+
+    The output-row block ``bh`` resolves through the autotuner cache like
+    every other dispatched op (benchmarks/tuned/tiles_conv2d.json; falls back
+    to the static default when untuned); pass ``bh`` to pin it. The resolved
+    value is snapped to the largest divisor of H so the grid tiles exactly.
+    """
     entry = dispatch.lookup("conv2d", x_bits=x_bits, w_bits=w_bits, y_bits=y_bits, impl=impl)
     if entry.key.impl == "jnp":
         return entry.fn(x_p, w_p, rq)
+    H, W = x_p.shape[0], x_p.shape[1]
+    C = x_p.shape[2] * P.pack_ratio(x_bits)
+    t = tuning.resolve_tiles(
+        "conv2d",
+        perm=tuning.perm_key(x_bits, w_bits, y_bits),
+        shape=tuning.shape_key(H * W, w_p.shape[0], 9 * C),
+        overrides={"bh": bh},
+    )
+    bh_ = max(d for d in range(1, min(t["bh"], H) + 1) if H % d == 0)
     x_pad = jnp.pad(x_p, ((1, 1), (1, 1), (0, 0)))  # quantized zero == 0.0
-    return entry.fn(x_pad, w_p, requant_vector(rq), interpret=_interpret())
+    return entry.fn(x_pad, w_p, requant_vector(rq), bh=bh_,
+                    interpret=_interpret())
 
 
 def wdqmm(

@@ -36,6 +36,10 @@ STATIC_DEFAULTS: dict[str, dict[str, int]] = {
     "mpmm": {"bm": 256, "bn": 256, "bk": 512},
     "wdqmm": {"bm": 256, "bn": 256, "bk": 512},
     "qntpack": {"bm": 256},
+    # conv2d's tunable axis is the output-row block per grid step (the
+    # im2col+MatMul call gets bh*W rows tall); bh=1 is the pre-registry
+    # one-row-per-step schedule.
+    "conv2d": {"bh": 1},
 }
 
 #: Candidate menus per tunable axis. ops.py clamps to the (padded) problem
@@ -44,6 +48,7 @@ STATIC_DEFAULTS: dict[str, dict[str, int]] = {
 _BM_MENU = (8, 16, 32, 64, 128, 256)
 _BN_MENU = (32, 64, 128, 256)
 _BK_MENU = (64, 128, 256, 512)
+_BH_MENU = (1, 2, 4, 8)
 
 
 def default_cache_dir() -> pathlib.Path:
@@ -188,6 +193,10 @@ def candidates(op: str, *, M: int, N: Optional[int] = None,
 
     if op == "qntpack":
         grid = [{"bm": bm} for bm in clamp(_BM_MENU, M, 8)]
+    elif op == "conv2d":
+        # M is the ofmap height here; ops.conv2d snaps bh to a divisor of H,
+        # so non-dividing candidates would silently duplicate smaller ones.
+        grid = [{"bh": bh} for bh in _BH_MENU if bh <= M and M % bh == 0]
     else:
         bms = clamp(_BM_MENU, M, 8)
         bns = clamp(_BN_MENU, N, 128)

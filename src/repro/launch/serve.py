@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--s-max", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--scheduler", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--prefill", default="auto",
+                    choices=("auto", "chunked", "stepwise"))
+    ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -33,15 +37,21 @@ def main():
         cfg = configs.reduced(cfg)
     policy = get_policy(args.policy)
     params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
-    eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=args.s_max)
+    eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=args.s_max,
+                      scheduler=args.scheduler, prefill=args.prefill,
+                      prefill_chunk=args.prefill_chunk)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(1, cfg.vocab, size=4).astype(np.int32),
                     max_new=args.max_new) for i in range(args.requests)]
     out = eng.run(reqs)
     done = sum(len(v) for v in out.values())
+    m = eng.metrics()
     print(f"served {len(out)} requests / {done} tokens; "
-          f"step ema {eng.monitor.ema * 1e3:.1f} ms; "
-          f"stragglers {eng.monitor.stragglers}")
+          f"prefill={m['prefill_mode']} ({m['prefill_jit_calls']} jit calls); "
+          f"ttft avg {m['ttft_avg_s'] * 1e3:.1f} ms; "
+          f"tokens/s {m['tokens_per_s']:.1f}; "
+          f"step ema {m['step_ema_s'] * 1e3:.1f} ms; "
+          f"stragglers {m['stragglers']}")
 
 
 if __name__ == "__main__":

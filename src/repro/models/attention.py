@@ -309,9 +309,15 @@ def attn_apply(
     cache: Optional[dict] = None,
     cache_pos: Optional[jax.Array] = None,
     kv_override: Optional[tuple[jax.Array, jax.Array]] = None,  # cross-attn
+    attend_cached: bool = False,
 ):
     """Returns (y, new_cache). Prefill/train: cache None -> flash path.
-    Decode: cache given, S == new tokens (typically 1)."""
+    Decode: cache given, S == new tokens (typically 1).
+
+    ``attend_cached`` forces the cache-read path even when S > 1 (chunked
+    prefill: queries must see tokens cached by *earlier* chunks, and must
+    read the same dequantized values the decode path reads so chunked and
+    token-by-token prefill are numerically identical)."""
     B, S, _ = x.shape
     lp_qkv = policy.of("attn_qkv")
     lp_out = policy.of("attn_out")
@@ -332,7 +338,8 @@ def attn_apply(
 
     bits = policy.kv_cache_bits
     new_cache = cache
-    prefill = cache is not None and S > 1 and kv_override is None
+    prefill = (cache is not None and S > 1 and kv_override is None
+               and not attend_cached)
     if cache is not None and kv_override is None:
         new_cache = cache_update(cache, k, v, cache_pos, bits)
         if not prefill:
@@ -424,9 +431,12 @@ def mla_apply(
     impl: ops.Impl = "auto",
     cache: Optional[dict] = None,
     cache_pos: Optional[jax.Array] = None,
+    attend_cached: bool = False,
 ):
     """MLA. Train/prefill: unabsorbed full-head attention. Decode: absorbed
-    path over the latent cache (c_kv, k_rope) — the MLA memory win."""
+    path over the latent cache (c_kv, k_rope) — the MLA memory win.
+    ``attend_cached`` forces the absorbed cache path even when S > 1
+    (chunked prefill; see attn_apply)."""
     from repro.models.common import rms_norm
 
     B, S, _ = x.shape
@@ -449,7 +459,7 @@ def mla_apply(
     q_rope = apply_rope(q_rope, cos, sin)
     k_rope = apply_rope(k_rope, cos, sin)
 
-    prefill = cache is not None and S > 1
+    prefill = cache is not None and S > 1 and not attend_cached
     new_cache = cache
     if cache is not None:
         bits = policy.kv_cache_bits

@@ -177,7 +177,8 @@ def _block_init(key, cfg: ArchConfig, policy, mode, dtype, *, kind: str) -> dict
 
 
 def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
-                 cache=None, cache_pos=None, cross_kv=None, causal=True):
+                 cache=None, cache_pos=None, cross_kv=None, causal=True,
+                 attend_cached=False):
     """Returns (x_out, new_cache, aux)."""
     _, nfn = _norm_fns(cfg)
     aux = jnp.zeros((), jnp.float32)
@@ -186,12 +187,14 @@ def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
         if kind.startswith("mla"):
             a, new_cache = mla_apply(params["attn"], h, pos, cfg.mla_cfg, policy,
                                      mode=mode, impl=impl, cache=cache,
-                                     cache_pos=cache_pos)
+                                     cache_pos=cache_pos,
+                                     attend_cached=attend_cached)
         else:
             sc = None if cache is None else cache.get("self")
             a, sc_new = attn_apply(params["attn"], h, pos, cfg.attn_cfg, policy,
                                    mode=mode, impl=impl, causal=causal,
-                                   cache=sc, cache_pos=cache_pos)
+                                   cache=sc, cache_pos=cache_pos,
+                                   attend_cached=attend_cached)
             new_cache = cache if cache is None else dict(cache, self=sc_new)
         x = x + a
         if kind == "dec":
@@ -315,7 +318,8 @@ def _remat_wrap(body, remat_policy: str):
 
 def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
                caches=None, cache_pos=None, cross_kv=None, causal=True,
-               remat: bool = True, remat_policy: str = "full"):
+               remat: bool = True, remat_policy: str = "full",
+               attend_cached: bool = False):
     """Scan the grouped block stacks. caches: list matching groups (stacked
     leading dim) or None. Returns (x, new_caches, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
@@ -334,7 +338,8 @@ def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
             bp, bc, ckv = xs
             h2, nc, aux = _block_apply(
                 bp, h, pos, cfg, policy, kind=kind, mode=mode, impl=impl,
-                cache=bc, cache_pos=cache_pos, cross_kv=ckv, causal=causal)
+                cache=bc, cache_pos=cache_pos, cross_kv=ckv, causal=causal,
+                attend_cached=attend_cached)
             return (h2.astype(h.dtype), auxc + aux), nc
 
         body_fn = (_remat_wrap(body, remat_policy)
@@ -358,7 +363,8 @@ def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
                             jax.tree.map(lambda a: a[sub], g_cache["shared"]))
                 x, sa_new, _ = _block_apply(
                     shared, x, pos, cfg, policy, kind="dense", mode=mode,
-                    impl=impl, cache=sa_cache, cache_pos=cache_pos)
+                    impl=impl, cache=sa_cache, cache_pos=cache_pos,
+                    attend_cached=attend_cached)
                 if sa_new is not None and g_cache is not None:
                     new_g_cache_chunks.append(("shared", sub, sa_new))
                 off += n_sub
@@ -557,4 +563,102 @@ def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
                                   remat=False)
     x = nfn(params["final_norm"], x)
     logits = linear_apply(params["head"], x, policy.of("head"), mode=mode, impl=impl)
+    return logits, new_caches
+
+
+#: Families whose caches are pure position-indexed KV stores — safe for
+#: batched/chunked prefill (right-padded chunk tails are masked out and later
+#: overwritten). Recurrent-state families (hybrid/rwkv) fold every token into
+#: the state unconditionally, so they must prefill token-by-token; encdec/vlm
+#: prefill needs the encoder/patch side-inputs forward() handles.
+PREFILL_CHUNKABLE_FAMILIES = ("dense", "moe", "mla_moe")
+
+
+def prefill_chunk(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
+                  cfg: ArchConfig, policy: PrecisionPolicy, *,
+                  last_idx: Optional[jax.Array] = None,
+                  head: bool = True,
+                  impl: ops.Impl = "auto"):
+    """Batched prefill of one token chunk: tokens (B, S_chunk) are written to
+    the quantized KV cache at ``pos`` ((B,) or scalar int32) in ONE forward,
+    attending through the cache (``attend_cached``) so chunks after the first
+    see earlier context — numerically the decode path, batched over S.
+
+    Returns (last-token logits (B, 1, V), new_caches); (B, S, V) is never
+    materialized. ``last_idx`` picks which chunk position is "last" (int32,
+    default S-1) so a right-padded final chunk can report the logits of the
+    final *real* token. Padded tail positions write k/v the causal mask hides
+    (the families in PREFILL_CHUNKABLE_FAMILIES have pure position-indexed
+    caches); :func:`prefill_into_slot` scrubs those rows so the cache state
+    is bit-identical to an unpadded prefill.
+
+    ``head=False`` (static) skips final-norm + the vocab head entirely and
+    returns ``(None, new_caches)`` — non-final chunks of a long prompt only
+    exist to fill the cache, so they never pay the head matmul.
+    """
+    if cfg.family not in PREFILL_CHUNKABLE_FAMILIES:
+        raise NotImplementedError(
+            f"chunked prefill unsupported for family {cfg.family!r}; "
+            f"step token-by-token via decode_step instead")
+    _, nfn = _norm_fns(cfg)
+    mode = "serve"
+    x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
+    B, S = tokens.shape
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (B,))
+    pos_ids = pos_b[:, None] + jnp.arange(S)[None]
+    x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
+                                  impl=impl, caches=caches, cache_pos=pos,
+                                  remat=False, attend_cached=True)
+    if not head:
+        return None, new_caches
+    if last_idx is None:
+        last_idx = jnp.int32(S - 1)
+    x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+    x_last = nfn(params["final_norm"], x_last)
+    logits = linear_apply(params["head"], x_last, policy.of("head"), mode=mode,
+                          impl=impl)
+    return logits, new_caches
+
+
+def prefill_into_slot(params: dict, tokens: jax.Array, slot: jax.Array,
+                      pos: jax.Array, caches: list, cfg: ArchConfig,
+                      policy: PrecisionPolicy, *,
+                      last_idx: Optional[jax.Array] = None,
+                      head: bool = True,
+                      impl: ops.Impl = "auto"):
+    """Single-slot prefill against an ``n_slots``-batch cache: slice cache row
+    ``slot``, run :func:`prefill_chunk` at B=1, scatter the row back. slot /
+    pos / last_idx are all traced int32, so one jitted trace serves every
+    (slot, position, chunk-fill) combination — compute is O(1 slot), not
+    O(n_slots) like stepping the whole decode batch per prompt token.
+
+    Cache leaves are stacked (n_groups list of (count, n_slots, ...) trees);
+    the slot axis is axis 1 everywhere. Returns (logits (1, 1, V), caches).
+    """
+    row = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, 1),
+                       caches)
+    # (1,) vector pos => seq_insert takes the scatter path, whose out-of-range
+    # writes DROP (a right-padded chunk near s_max must not clamp-shift onto
+    # real cache rows the way dynamic_update_slice would).
+    pos_v = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    logits, row = prefill_chunk(params, tokens, pos_v, row, cfg, policy,
+                                last_idx=last_idx, head=head, impl=impl)
+    if last_idx is not None:
+        # Scrub the right-padded tail of a final chunk: the rows it wrote are
+        # causally masked anyway, but zeroing them makes chunked prefill
+        # bit-identical to an unpadded whole-prompt prefill (and keeps the
+        # "no stale K/V" cache-manager guarantee). Real rows get an
+        # out-of-range index, which scatter-with-drop ignores; every cache
+        # leaf of a chunkable family is (count, B, s_max, ...).
+        S = tokens.shape[1]
+        row_idx = jnp.reshape(pos, ()) + jnp.arange(S, dtype=jnp.int32)
+        scrub_idx = jnp.where(jnp.arange(S) > last_idx, row_idx,
+                              jnp.int32(2**30))
+        row = jax.tree.map(
+            lambda a: a.at[:, :, scrub_idx].set(jnp.zeros((), a.dtype),
+                                                mode="drop"),
+            row)
+    new_caches = jax.tree.map(
+        lambda full, r: jax.lax.dynamic_update_slice_in_dim(full, r, slot, 1),
+        caches, row)
     return logits, new_caches

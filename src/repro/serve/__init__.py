@@ -1,0 +1,31 @@
+"""Serving subsystem: cache manager + scheduler + prefill + engine facade.
+
+Layering (each module owns one concern; the engine only composes):
+
+  * :mod:`repro.serve.cache`     — KV-slot cache manager (rows, positions,
+    recycling, capacity),
+  * :mod:`repro.serve.scheduler` — pluggable admission policy (fcfs / spf),
+  * :mod:`repro.serve.prefill`   — chunked/batched vs token-by-token prompt
+    ingestion,
+  * :mod:`repro.serve.engine`    — the decode loop, streaming callbacks, and
+    the metrics snapshot.
+"""
+
+from repro.serve.cache import CapacityError, SlotCache
+from repro.serve.engine import KernelStatsAccumulator, Request, ServeEngine, StepMonitor
+from repro.serve.prefill import ChunkedPrefill, StepwisePrefill, make_prefiller
+from repro.serve.scheduler import (
+    SCHEDULERS,
+    FCFSScheduler,
+    Scheduler,
+    ShortestPromptFirstScheduler,
+    make_scheduler,
+)
+
+__all__ = [
+    "CapacityError", "SlotCache",
+    "KernelStatsAccumulator", "Request", "ServeEngine", "StepMonitor",
+    "ChunkedPrefill", "StepwisePrefill", "make_prefiller",
+    "SCHEDULERS", "FCFSScheduler", "Scheduler",
+    "ShortestPromptFirstScheduler", "make_scheduler",
+]

@@ -1,0 +1,106 @@
+"""KV-slot cache manager: owns the model cache pytree, per-slot write
+positions, slot acquisition/recycling, and capacity checks against ``s_max``.
+
+The cache is the model-zoo cache layout (models.model.init_cache): a list of
+per-scan-group trees whose leaves are stacked ``(count, n_slots, ...)`` — the
+slot axis is axis 1 on every leaf. The manager is the single owner of that
+pytree and of the ``pos`` vector the decode step consumes, so the engine,
+prefill strategies, and schedulers never touch cache internals directly (the
+seam later paged-cache / multi-engine PRs swap out).
+
+Recycling is EXPLICIT: :meth:`reset_slot` zeroes the slot's cache rows and
+resets its position (the pre-refactor engine silently rewound ``slot_pos`` and
+relied on the causal mask to hide stale rows — correct, but a property of the
+attention mask, not a guarantee of the cache layer).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.models import model as M
+from repro.models.model import ArchConfig
+
+
+class CapacityError(ValueError):
+    """A request can never fit a slot: prompt + max_new exceeds ``s_max``."""
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _zero_slot(caches, slot):
+    """Zero cache row ``slot`` (axis 1) across every group/leaf. ``slot`` is
+    traced, so one compiled program serves all slots."""
+    return jax.tree.map(
+        lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)), caches)
+
+
+class SlotCache:
+    """Static-slot KV cache with per-slot write positions and occupancy."""
+
+    def __init__(self, cfg: ArchConfig, policy: PrecisionPolicy,
+                 n_slots: int, s_max: int):
+        self.cfg, self.policy = cfg, policy
+        self.n_slots, self.s_max = n_slots, s_max
+        self.caches = M.init_cache(cfg, policy, n_slots, s_max)
+        self.pos = np.zeros(n_slots, np.int32)  # next write position per slot
+        self.resets = 0  # explicit slot recycles (metrics)
+        self._busy = [False] * n_slots
+
+    # --- occupancy ---------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.n_slots) if not self._busy[s]]
+
+    def active_slots(self) -> int:
+        return sum(self._busy)
+
+    def check_admissible(self, need: int) -> None:
+        """Reject-at-submit capacity check: ``need`` tokens must fit a fresh
+        slot. (The pre-refactor engine admitted anything and let cache writes
+        clamp/corrupt; this makes the ``s_max`` bound a hard guarantee.)"""
+        if need > self.s_max:
+            raise CapacityError(
+                f"request needs {need} cache rows (prompt + max_new) but "
+                f"s_max={self.s_max}")
+
+    def acquire(self, need: int) -> Optional[int]:
+        """Claim the lowest free slot for ``need`` new tokens, recycling it
+        first whenever the previous occupant left a nonzero position —
+        request isolation: starting a new request mid-context would let the
+        causal mask expose the previous occupant's cached K/V to it
+        (cross-request contamination). Returns the slot index, or None when
+        all slots are busy."""
+        self.check_admissible(need)
+        for s in range(self.n_slots):
+            if self._busy[s]:
+                continue
+            if self.pos[s] != 0:
+                self.reset_slot(s)
+            self._busy[s] = True
+            return s
+        return None
+
+    def release(self, slot: int) -> None:
+        """Return a slot to the free pool. Rows are recycled lazily by the
+        next :meth:`acquire` (sessions with KV reuse across requests would
+        need an explicit affinity layer on top)."""
+        self._busy[slot] = False
+
+    # --- positions / rows --------------------------------------------------
+
+    def advance(self, slot: int, n: int) -> None:
+        self.pos[slot] += n
+
+    def reset_slot(self, slot: int) -> None:
+        """Explicit recycle: zero the slot's cache rows and rewind its write
+        position. Guarantees no stale K/V survives a recycle regardless of
+        what masking downstream attention applies."""
+        self.caches = _zero_slot(self.caches, jnp.int32(slot))
+        self.pos[slot] = 0
+        self.resets += 1

@@ -1,16 +1,28 @@
-"""Serving engine: prefill + decode with continuous batching over static
-slots, plus a step-time straggler watchdog.
+"""Serving facade: request lifecycle over a modular serving stack.
 
-serve_step == models.model.decode_step (one new token against the quantized
-KV cache); this module owns request lifecycle and batching — the layer a
-production deployment scripts against (examples/serve_batched.py).
+The engine is a thin composition of the serving subsystem's three parts —
+this module owns ONLY the decode loop and observability:
+
+  * :class:`repro.serve.cache.SlotCache`     — cache rows, per-slot write
+    positions, recycling, ``s_max`` capacity checks;
+  * :class:`repro.serve.scheduler.Scheduler` — admission order (pluggable:
+    ``fcfs`` / ``spf`` / any Scheduler instance);
+  * :mod:`repro.serve.prefill`               — how prompts enter the cache
+    (batched/chunked via ``model.prefill_into_slot``, or token-by-token).
+
+Decode remains one jitted ``models.model.decode_step`` over ``n_slots``
+static slots with per-slot cache positions (continuous batching: admission
+happens while other slots keep decoding). ``metrics()`` snapshots TTFT,
+throughput, queue depth, and straggler counts for the deployment layer
+(examples/serve_batched.py, launch/serve.py).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +32,9 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels import dispatch
 from repro.models import model as M
 from repro.models.model import ArchConfig
+from repro.serve.cache import SlotCache
+from repro.serve.prefill import make_prefiller
+from repro.serve.scheduler import Scheduler, make_scheduler
 
 
 @dataclasses.dataclass
@@ -28,6 +43,9 @@ class Request:
     prompt: np.ndarray  # (S,) int32
     max_new: int = 16
     out: Optional[list] = None
+    # lifecycle timestamps (engine-managed; metrics inputs)
+    t_submit: float = 0.0
+    t_first: float = 0.0
 
 
 class StepMonitor:
@@ -48,29 +66,75 @@ class StepMonitor:
         return slow
 
 
+class KernelStatsAccumulator:
+    """Per-engine view of the process-wide dispatch counters.
+
+    Instead of one construction-time snapshot diffed at read time (which a
+    ``dispatch.reset_dispatch_counts()`` anywhere in the process silently
+    wipes), deltas are harvested incrementally into an engine-owned counter:
+    a reset observed between harvests loses at most the dispatches of that
+    window, never the accumulated history, and per-engine counts are
+    monotone by construction.
+    """
+
+    def __init__(self):
+        self._counts: collections.Counter = collections.Counter()
+        self._last = dict(dispatch.DISPATCH_COUNTS)
+
+    def harvest(self) -> None:
+        cur = dict(dispatch.DISPATCH_COUNTS)
+        for k, v in cur.items():
+            prev = self._last.get(k, 0)
+            # v < prev means the process-wide counter was reset since the
+            # last harvest: everything currently on it happened after.
+            d = v - prev if v >= prev else v
+            if d > 0:
+                self._counts[k] += d
+        self._last = cur
+
+    def stats(self) -> dict[str, int]:
+        self.harvest()
+        return {str(k): v for k, v in sorted(self._counts.items(),
+                                             key=lambda kv: str(kv[0]))}
+
+
 class ServeEngine:
     """Continuous batching over ``n_slots`` static cache slots."""
 
     def __init__(self, params, cfg: ArchConfig, policy: PrecisionPolicy, *,
                  n_slots: int = 4, s_max: int = 64, impl="auto",
-                 greedy: bool = True):
+                 greedy: bool = True,
+                 scheduler: Union[str, Scheduler, None] = "fcfs",
+                 prefill: str = "auto", prefill_chunk: int = 16):
         self.params, self.cfg, self.policy = params, cfg, policy
         # fail at construction, not mid-decode, if the policy needs a kernel
         # cell outside the registered 27-permutation library
         dispatch.ensure_policy_supported(policy)
         self.n_slots, self.s_max = n_slots, s_max
-        self.caches = M.init_cache(cfg, policy, n_slots, s_max)
-        self.slot_pos = np.zeros(n_slots, np.int32)  # next write position
+        self.impl = impl
+        self.greedy = greedy
+        self.cache = SlotCache(cfg, policy, n_slots, s_max)
+        self.scheduler = make_scheduler(scheduler)
+        self.monitor = StepMonitor()
+        self._kstats = KernelStatsAccumulator()
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_remaining = np.zeros(n_slots, np.int32)
-        self.monitor = StepMonitor()
-        self.impl = impl
-        self._dispatch_start = dict(dispatch.DISPATCH_COUNTS)
 
         self._decode = jax.jit(
             lambda p, tok, pos, caches: M.decode_step(
                 p, tok, pos, caches, cfg, policy, impl=impl),
             static_argnames=())
+        self.prefiller = make_prefiller(
+            prefill, params, cfg, policy, impl=impl, chunk=prefill_chunk,
+            step_fn=self._step, n_slots=n_slots)
+
+        # metrics accumulators
+        self._decode_steps = 0
+        self._tokens_out = 0
+        self._completed = 0
+        self._ttft: list[float] = []
+        self._serve_seconds = 0.0
+        self._run_t0: Optional[float] = None  # set while run() is active
 
     # --- kernel-matrix observability --------------------------------------
 
@@ -80,72 +144,121 @@ class ServeEngine:
 
     def kernel_stats(self) -> dict[str, int]:
         """Which cells of the 27-permutation matrix were exercised since this
-        engine's construction. Two caveats: dispatch happens at jit *trace*
-        time, so treat counts as a coverage signal (cell was hit / retraced),
-        not call volume; and the underlying counters are process-wide deltas,
-        so other engines or direct ops.* calls in the same process also
-        appear here."""
-        out: dict[str, int] = {}
-        for k, v in dispatch.DISPATCH_COUNTS.items():
-            d = v - self._dispatch_start.get(k, 0)
-            if d > 0:  # guard: counters may have been reset mid-lifetime
-                out[str(k)] = d
-        return dict(sorted(out.items()))
+        engine's construction. Counts are harvested incrementally per engine,
+        so a process-wide ``dispatch.reset_dispatch_counts()`` no longer
+        erases history (the old documented caveat is now a guarantee). The
+        remaining caveats: dispatch happens at jit *trace* time, so treat
+        counts as a coverage signal (cell was hit / retraced), not call
+        volume; and dispatches of other engines in the same process between
+        this engine's steps still land here."""
+        return self._kstats.stats()
 
     # --- request lifecycle -------------------------------------------------
 
     def _step(self, toks: np.ndarray):
-        """One decode step with per-slot cache positions (vector pos)."""
+        """One decode step with per-slot cache positions (vector pos).
+
+        ``pos`` is passed as a COPY: ``jnp.asarray`` zero-copy-aliases numpy
+        buffers on the CPU backend, and dispatch is async — handing the live
+        ``cache.pos`` buffer to the decode while the caller then advances
+        positions is a data race (the pre-refactor engine's prefill loop hit
+        exactly this: mutate-after-dispatch, logits never consumed between
+        steps, nondeterministic tokens under load)."""
         t0 = time.perf_counter()
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(toks), jnp.asarray(self.slot_pos),
-            self.caches)
+        logits, self.cache.caches = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(self.cache.pos.copy()),
+            self.cache.caches)
         self.monitor.observe(time.perf_counter() - t0)
         return logits
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Token-by-token prefill into one slot; other slots' cache rows are
-        untouched (their write positions do not advance, so any transient
-        writes are overwritten by their next real step)."""
-        logits = None
-        for tok in req.prompt:
-            toks = np.zeros((self.n_slots, 1), np.int32)
-            toks[slot, 0] = tok
-            logits = self._step(toks)
-            self.slot_pos[slot] += 1
+    def _bind(self, slot: int, req: Request) -> None:
         req.out = []
         self.slot_req[slot] = req
         self.slot_remaining[slot] = req.max_new
-        return logits
+
+    def _admit(self) -> None:
+        """Admit waiting requests into free slots (continuous batching:
+        admission runs between decode steps, while other slots decode)."""
+        while self.scheduler.pending():
+            req = self.scheduler.next_request()
+            slot = self.cache.acquire(len(req.prompt) + req.max_new)
+            if slot is None:  # every slot busy: requeue at the front
+                self.scheduler.requeue(req)
+                return
+            self.prefiller.prefill(self.cache, slot, req.prompt)
+            self._bind(slot, req)
+
+    def _active(self) -> bool:
+        return any(r is not None for r in self.slot_req)
 
     def run(self, requests: list[Request], *, on_token: Optional[Callable] = None):
         """Drive all requests to completion; returns {rid: [token, ...]}."""
-        queue = list(requests)
+        t_run = time.perf_counter()
+        self._run_t0 = t_run
+        for r in requests:
+            self.cache.check_admissible(len(r.prompt) + r.max_new)
+            r.t_submit = t_run
+        self.scheduler.submit(requests)
         results: dict[int, list[int]] = {}
-        active = lambda: any(r is not None for r in self.slot_req)
-        while queue or active():
-            # fill free slots (continuous batching: admit while others decode)
-            for s in range(self.n_slots):
-                if self.slot_req[s] is None and queue:
-                    if self.slot_pos[s] + len(queue[0].prompt) + queue[0].max_new > self.s_max:
-                        self.slot_pos[s] = 0  # recycle slot (fresh context)
-                    self._prefill_slot(s, queue.pop(0))
+        while self.scheduler.pending() or self._active():
+            self._admit()
             # one decode step for every active slot
             toks = np.zeros((self.n_slots, 1), np.int32)
             for s, r in enumerate(self.slot_req):
                 if r is not None:
                     toks[s, 0] = (r.prompt[-1] if not r.out else r.out[-1])
             logits = self._step(toks)
+            self._decode_steps += 1
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            now = time.perf_counter()
             for s, r in enumerate(self.slot_req):
                 if r is None:
                     continue
+                if not r.out:
+                    r.t_first = now
+                    self._ttft.append(now - r.t_submit)
                 r.out.append(int(nxt[s]))
-                self.slot_pos[s] += 1
+                self.cache.advance(s, 1)
                 self.slot_remaining[s] -= 1
+                self._tokens_out += 1
                 if on_token:
                     on_token(r.rid, int(nxt[s]))
                 if self.slot_remaining[s] <= 0:
                     results[r.rid] = r.out
                     self.slot_req[s] = None
+                    self.cache.release(s)
+                    self._completed += 1
+            self._kstats.harvest()
+        self._serve_seconds += time.perf_counter() - t_run
+        self._run_t0 = None
         return results
+
+    # --- observability ------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Serving metrics snapshot: latency (TTFT), throughput, backlog, and
+        the straggler count from the StepMonitor — the numbers a deployment
+        scrapes (examples/serve_batched.py prints this). Safe to call
+        mid-run (e.g. from an on_token callback): the active run's elapsed
+        time is included in the throughput denominator."""
+        elapsed = self._serve_seconds
+        if self._run_t0 is not None:
+            elapsed += time.perf_counter() - self._run_t0
+        elapsed = max(elapsed, 1e-9)
+        return {
+            "requests_completed": self._completed,
+            "tokens_generated": self._tokens_out,
+            "tokens_per_s": self._tokens_out / elapsed,
+            "decode_steps": self._decode_steps,
+            "prefill_mode": self.prefiller.name,
+            "prefill_chunk": self.prefiller.chunk,
+            "prefill_jit_calls": self.prefiller.jit_calls,
+            "ttft_avg_s": float(np.mean(self._ttft)) if self._ttft else 0.0,
+            "ttft_max_s": float(np.max(self._ttft)) if self._ttft else 0.0,
+            "queue_depth": self.scheduler.pending(),
+            "active_slots": self.cache.active_slots(),
+            "slot_resets": self.cache.resets,
+            "step_ema_s": self.monitor.ema or 0.0,
+            "stragglers": self.monitor.stragglers,
+            "scheduler": self.scheduler.name,
+        }

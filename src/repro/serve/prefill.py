@@ -1,0 +1,132 @@
+"""Prefill strategies: how a request's prompt gets written into its cache slot.
+
+``ChunkedPrefill`` is the batched path: the prompt is split into fixed-size
+chunks and each chunk lowers through ``model.prefill_into_slot`` — ONE jitted
+call that embeds, attends (through the cache, so later chunks see earlier
+ones), and scatters the quantized K/V into the target slot's cache row. A
+prompt of length S costs ceil(S / chunk) jitted calls touching one slot,
+versus S full ``(n_slots, 1)`` decode steps on the pre-refactor path. The
+chunk size is fixed, so there is exactly one trace regardless of prompt
+length; the final chunk is right-padded and ``last_idx`` selects the real
+last-token logits (padded tail writes are masked until overwritten — see
+``model.prefill_chunk``).
+
+``StepwisePrefill`` is that pre-refactor path, kept as (a) the fallback for
+recurrent-state families whose caches absorb every token unconditionally and
+(b) the bit-exactness regression baseline the chunked path is tested against.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.models import model as M
+from repro.models.model import ArchConfig
+from repro.serve.cache import SlotCache
+
+
+class ChunkedPrefill:
+    """Single-slot batched/chunked prefill via ``model.prefill_into_slot``."""
+
+    name = "chunked"
+
+    def __init__(self, params, cfg: ArchConfig, policy: PrecisionPolicy, *,
+                 impl="auto", chunk: int = 16):
+        if not self.supports(cfg):
+            raise NotImplementedError(
+                f"chunked prefill unsupported for family {cfg.family!r} "
+                f"(supported: {M.PREFILL_CHUNKABLE_FAMILIES}); use "
+                f"StepwisePrefill")
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.params = params
+        self.chunk = chunk
+        self.jit_calls = 0  # jitted prefill invocations (the O(S/chunk) claim)
+        # two traces: non-final chunks only fill the cache (no final-norm /
+        # vocab-head matmul); the final chunk also returns last-token logits
+        self._fn_last = jax.jit(
+            lambda p, toks, slot, pos, last, caches: M.prefill_into_slot(
+                p, toks, slot, pos, caches, cfg, policy, last_idx=last,
+                impl=impl))
+        self._fn_mid = jax.jit(
+            lambda p, toks, slot, pos, caches: M.prefill_into_slot(
+                p, toks, slot, pos, caches, cfg, policy, head=False,
+                impl=impl))
+
+    @staticmethod
+    def supports(cfg: ArchConfig) -> bool:
+        return cfg.family in M.PREFILL_CHUNKABLE_FAMILIES
+
+    def prefill(self, cache: SlotCache, slot: int, prompt: np.ndarray):
+        """Write ``prompt`` into ``slot`` starting at its current position.
+        Returns the last real prompt token's logits (1, 1, V)."""
+        S = len(prompt)
+        logits = None
+        off = 0
+        while off < S:
+            n = min(self.chunk, S - off)
+            toks = np.zeros((1, self.chunk), np.int32)
+            toks[0, :n] = prompt[off : off + n]
+            args = (self.params, jnp.asarray(toks), jnp.int32(slot),
+                    jnp.int32(cache.pos[slot]))
+            if off + n >= S:  # final chunk: last-token logits + pad scrub
+                logits, cache.caches = self._fn_last(
+                    *args, jnp.int32(n - 1), cache.caches)
+            else:
+                _, cache.caches = self._fn_mid(*args, cache.caches)
+            cache.advance(slot, n)
+            self.jit_calls += 1
+            off += n
+        return logits
+
+
+class StepwisePrefill:
+    """Token-by-token prefill through the engine's full-batch decode step.
+
+    ``step_fn`` is the engine's jitted ``(n_slots, 1)`` decode (other slots
+    receive token 0; their write positions do not advance, so any transient
+    row writes are overwritten by their next real step). This is the
+    pre-refactor data path, byte for byte.
+    """
+
+    name = "stepwise"
+
+    def __init__(self, step_fn: Callable[[np.ndarray], jax.Array], n_slots: int):
+        self._step = step_fn
+        self.n_slots = n_slots
+        self.chunk = 1
+        self.jit_calls = 0
+
+    @staticmethod
+    def supports(cfg: ArchConfig) -> bool:
+        return True
+
+    def prefill(self, cache: SlotCache, slot: int, prompt: np.ndarray):
+        logits = None
+        for tok in prompt:
+            toks = np.zeros((self.n_slots, 1), np.int32)
+            toks[slot, 0] = tok
+            logits = self._step(toks)
+            cache.advance(slot, 1)
+            self.jit_calls += 1
+        return None if logits is None else logits[slot : slot + 1, -1:]
+
+
+def make_prefiller(mode: str, params, cfg: ArchConfig,
+                   policy: PrecisionPolicy, *, impl, chunk: int,
+                   step_fn: Callable, n_slots: int):
+    """Resolve the prefill strategy: ``auto`` picks chunked when the family
+    supports it and falls back to stepwise (hybrid/rwkv/encdec/vlm)."""
+    if mode == "auto":
+        mode = "chunked" if ChunkedPrefill.supports(cfg) else "stepwise"
+    if mode == "chunked":
+        return ChunkedPrefill(params, cfg, policy, impl=impl, chunk=chunk)
+    if mode == "stepwise":
+        return StepwisePrefill(step_fn, n_slots)
+    raise ValueError(f"unknown prefill mode {mode!r} "
+                     f"(expected auto | chunked | stepwise)")

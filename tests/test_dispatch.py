@@ -113,6 +113,37 @@ def test_dispatched_conv2d_and_qntpack_and_wdqmm_match_ref():
     np.testing.assert_allclose(a, b, rtol=2e-2, atol=0.02 * np.abs(a).max())
 
 
+def test_conv2d_bh_tiles_route_through_autotuner(tmp_path, monkeypatch):
+    """conv2d resolves its output-row block via resolve_tiles like every
+    other dispatched op: cached winners apply, explicit bh pins, non-divisor
+    values snap to a divisor of H, and every block shape stays bit-exact."""
+    rq = Q.make_requant_params(y_bits=4, eps_phi=2.0**-8, eps_y=1.0)
+    xq = RNG.randint(0, 4, size=(6, 6, 16)).astype(np.uint8)
+    wq = RNG.randint(-2, 2, size=(16, 144)).astype(np.int8)
+    x_p, w_p = jnp.asarray(P.pack_np(xq, 2)), jnp.asarray(P.pack_np(wq, 2))
+    want = np.asarray(ref.conv2d_ref(x_p, w_p, rq, x_bits=2, w_bits=2, y_bits=4))
+    for bh in (2, 3, 4, 6):  # 4 snaps to 3 (largest divisor of H=6)
+        got = ops.conv2d(x_p, w_p, rq, x_bits=2, w_bits=2, y_bits=4,
+                         impl="pallas", bh=bh)
+        np.testing.assert_array_equal(np.asarray(got), want, err_msg=f"bh={bh}")
+
+    monkeypatch.setenv("REPRO_TUNED_DIR", str(tmp_path))
+    tuning.reset_caches()
+    try:
+        perm = tuning.perm_key(2, 2, 4)
+        shape = tuning.shape_key(36, 16, 144)  # H*W, Cout, 9*C
+        assert tuning.resolve_tiles("conv2d", perm=perm, shape=shape) == {"bh": 1}
+        tuning.get_cache("conv2d").put(perm, shape, {"bh": 3}, 10.0)
+        assert tuning.resolve_tiles("conv2d", perm=perm, shape=shape) == {"bh": 3}
+        got = ops.conv2d(x_p, w_p, rq, x_bits=2, w_bits=2, y_bits=4, impl="pallas")
+        np.testing.assert_array_equal(np.asarray(got), want)
+        assert tuning.candidates("conv2d", M=6) == [{"bh": 1}, {"bh": 2}]
+        assert tuning.candidates("conv2d", M=16) == [
+            {"bh": 1}, {"bh": 2}, {"bh": 4}, {"bh": 8}]
+    finally:
+        tuning.reset_caches()
+
+
 # ------------------------------------------------------------- tile tuning
 
 
