@@ -16,9 +16,12 @@ Checks, per benchmark:
 
 ``lm_serving`` is gated by structural invariants instead of tiles: every
 (arch, policy) byte-accounting row present, quantized policies never cost
-more HBM bytes/token than bf16 (and w4a8 <= w8a8), and the serving engine's
+more HBM bytes/token than bf16 (and w4a8 <= w8a8), the serving engine's
 chunked prefill must (a) decode bit-identically to the token-by-token path
-and (b) cut jitted calls per admission by >= its declared factor.
+and (b) cut jitted calls per admission by >= its declared factor, and the
+paged KV cache must decode bit-identically to the dense-slot backend on
+every precision row while admitting >= MIN_PAGED_CAPACITY_RATIO x the
+concurrent requests at 4-bit KV under an equal cache byte budget.
 
 Absolute microseconds are intentionally NOT gated: CI runners vary too much.
 Exit code 0 = green, 1 = any check failed (report on stdout).
@@ -94,6 +97,30 @@ def check_lm_serving(out_dir: pathlib.Path) -> list[str]:
                 f"{r['call_reduction']}x < {lm_serving.MIN_CALL_REDUCTION}x "
                 f"({r['prefill_calls_chunked']} chunked vs "
                 f"{r['prefill_calls_stepwise']} stepwise jitted calls)")
+
+    # 4. paged cache: bit-exactness on every precision row, and the
+    # capacity win at 4-bit KV under the equal-byte budget
+    paged = {r["policy"]: r for r in rows if r.get("kind") == "paged_serving"}
+    missing_paged = set(lm_serving.PAGED_POLICIES) - set(paged)
+    if missing_paged:
+        errors.append(
+            f"lm_serving: missing paged_serving rows: {sorted(missing_paged)}")
+    for pol, r in sorted(paged.items()):
+        if not r.get("tokens_match"):
+            errors.append(
+                f"lm_serving/{r['name']}: paged decode produced different "
+                f"tokens than the dense-slot backend")
+    kv4 = [r for r in paged.values() if r.get("kv_bits") == 4]
+    if not kv4:
+        errors.append("lm_serving: no paged_serving row at 4-bit KV")
+    for r in kv4:
+        if r["capacity_ratio"] < lm_serving.MIN_PAGED_CAPACITY_RATIO:
+            errors.append(
+                f"lm_serving/{r['name']}: paged capacity ratio "
+                f"{r['capacity_ratio']}x < "
+                f"{lm_serving.MIN_PAGED_CAPACITY_RATIO}x at 4-bit KV "
+                f"({r['capacity_paged']} paged vs {r['capacity_slot']} slot "
+                f"concurrent requests at equal cache bytes)")
     return errors
 
 

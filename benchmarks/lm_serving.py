@@ -8,9 +8,19 @@ v5e-projected tokens/s/chip = HBM_BW / bytes.
 Part 2 (measured): the serving engine's prefill path — batched/chunked
 prefill (``serve.prefill.ChunkedPrefill``) vs the token-by-token baseline on
 the same prompts, counting jitted calls per admission and TTFT, and checking
-the decoded tokens match bit-for-bit. Rows land in ``BENCH_lm_serving.json``
-so ``check_bench.py`` gates both the byte-accounting invariants and the
-prefill-speedup claim (stepwise >= 5x the chunked call count).
+the decoded tokens match bit-for-bit.
+
+Part 3 (paged cache): slot vs paged backend at an EQUAL cache byte budget —
+concurrent-request capacity (the dense layout reserves a full ``s_max``
+stripe per request; the paged layout holds only the pages a request's
+tokens occupy), effective bytes-per-token by KV precision, measured
+throughput at each backend's admissible concurrency, and decoded-token
+bit-exactness paged vs slot.
+
+Rows land in ``BENCH_lm_serving.json`` so ``check_bench.py`` gates the
+byte-accounting invariants, the prefill-speedup claim (stepwise >= 5x the
+chunked call count), paged bit-exactness, and the paged capacity win
+(>= MIN_PAGED_CAPACITY_RATIO at 4-bit KV).
 """
 
 from __future__ import annotations
@@ -27,6 +37,15 @@ SERVE_ARCH = "internlm2-1.8b"
 SERVE_PROMPT_LEN = 40
 SERVE_CHUNK = 8
 MIN_CALL_REDUCTION = 5.0
+
+#: The paged-vs-slot comparison shape (check_bench gates the 4-bit row).
+PAGED_POLICIES = ("bf16", "w4a8", "w4a8kv4")  # kv_cache_bits None / 8 / 4
+PAGED_S_MAX = 64
+PAGED_SLOTS = 4
+PAGED_PAGE_SIZE = 16
+PAGED_PROMPT_LEN = 16
+PAGED_MAX_NEW = 8
+MIN_PAGED_CAPACITY_RATIO = 1.5
 
 
 def _weight_bytes(cfg, policy) -> float:
@@ -143,9 +162,170 @@ def run_serve_prefill() -> list[dict]:
     return [row]
 
 
+def run_paged_serving() -> list[dict]:
+    """Slot vs paged KV cache at an equal cache byte budget.
+
+    Capacity is the MEASURED peak of concurrently admitted requests on the
+    same stream: the dense backend tops out at ``n_slots`` no matter how
+    short requests are; the paged backend admits until the page budget is
+    spent (``usable_pages // pages_per_request`` when admission is
+    healthy). The byte budget is pinned by giving the paged pool exactly as
+    many token rows as the dense layout (n_pages * page_size == n_slots *
+    s_max, scratch page included — strictly, the paged pool is a page SHORT
+    of the dense row count once the scratch page is carved out, so the
+    ratio is not flattered by the budget). Throughput is measured at each
+    backend's own admissible concurrency, and decoded tokens must match
+    bit-for-bit."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
+    need = PAGED_PROMPT_LEN + PAGED_MAX_NEW
+    n_pages = (PAGED_SLOTS * PAGED_S_MAX) // PAGED_PAGE_SIZE  # byte parity
+    rows = []
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, size=PAGED_PROMPT_LEN).astype(np.int32)
+               for _ in range(8)]
+
+    def drive(policy, params, backend, n_slots):
+        """Returns (tokens, engine, wall_s, peak concurrent admissions) —
+        peak is MEASURED from the live cache occupancy at every emitted
+        token, so an admission regression (e.g. an over-conservative
+        can_admit serializing requests) fails the capacity gate instead of
+        hiding behind arithmetic that mirrors the implementation."""
+        eng = ServeEngine(
+            params, cfg, policy, n_slots=n_slots, s_max=PAGED_S_MAX,
+            impl="jnp", prefill="chunked", prefill_chunk=SERVE_CHUNK,
+            cache=backend, page_size=PAGED_PAGE_SIZE,
+            n_pages=n_pages if backend == "paged" else None)
+        reqs = [Request(rid=i, prompt=p.copy(), max_new=PAGED_MAX_NEW)
+                for i, p in enumerate(prompts)]
+        peak = 0
+
+        def on_token(_rid, _tok):
+            nonlocal peak
+            peak = max(peak, eng.cache.active_slots())
+
+        t0 = time.perf_counter()
+        out = eng.run(reqs, on_token=on_token)
+        dt = time.perf_counter() - t0
+        return out, eng, dt, peak
+
+    # the page-budget arithmetic only sizes the engines (slot width must
+    # not be the bottleneck); the gated capacity numbers are MEASURED below
+    pages_per_request = -(-need // PAGED_PAGE_SIZE)
+    slots_paged = max((n_pages - 1) // pages_per_request, 1)
+
+    for pol_name in PAGED_POLICIES:
+        policy = get_policy(pol_name)
+        params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+        out_s, eng_s, dt_s, capacity_slot = drive(
+            policy, params, "slot", PAGED_SLOTS)
+        out_p, eng_p, dt_p, capacity_paged = drive(
+            policy, params, "paged", slots_paged)
+        m_s, m_p = eng_s.metrics(), eng_p.metrics()
+        row = {
+            "name": f"lm_paged_serving_{pol_name}",
+            "kind": "paged_serving",
+            "arch": cfg.name,
+            "policy": pol_name,
+            "kv_bits": policy.kv_cache_bits or 16,
+            "page_size": PAGED_PAGE_SIZE,
+            "s_max": PAGED_S_MAX,
+            "request_rows": need,
+            "pages_per_request": pages_per_request,
+            "kv_bytes_budget": m_p["kv_bytes_total"],
+            "kv_bytes_per_token_paged": round(m_p["kv_bytes_per_token"], 3),
+            "kv_bytes_per_token_slot": round(m_s["kv_bytes_per_token"], 3),
+            "capacity_slot": capacity_slot,
+            "capacity_paged": capacity_paged,
+            "capacity_ratio": round(capacity_paged / max(capacity_slot, 1), 3),
+            "tokens_per_s_slot": round(m_s["tokens_per_s"], 2),
+            "tokens_per_s_paged": round(m_p["tokens_per_s"], 2),
+            "wall_s_slot": round(dt_s, 4),
+            "wall_s_paged": round(dt_p, 4),
+            "tokens_match": out_s == out_p,
+        }
+        rows.append(row)
+        csv_row(f"lm_paged_serving_{pol_name}", dt_p * 1e6,
+                f"capacity={capacity_paged}v{capacity_slot};"
+                f"ratio={row['capacity_ratio']};"
+                f"tokens_match={row['tokens_match']}")
+    return rows
+
+
+def run_kvpage_tune() -> list[dict]:
+    """Autotune the paged cache's page size like a kernel tile.
+
+    Each candidate ``ps`` builds a paged engine at the benchmark shape and
+    times a short decode burst end-to-end (gather/scatter grid cost vs
+    page-tail waste is a wall-clock trade-off, so the whole step is the
+    kernel being tuned). The winner lands in ``benchmarks/tuned/
+    tiles_kvpage.json`` keyed on (kv precision, s_max) and becomes the
+    default ``PagedKVCache`` page size for that cell; under
+    ``REPRO_TUNE_FROZEN`` the cached winner (or static default) is reported
+    without searching, like every other tuned op."""
+    import jax
+    import numpy as np
+
+    from repro.kernels import tuning
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
+    policy = get_policy("w4a8kv4")
+    params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, size=PAGED_PROMPT_LEN).astype(np.int32)
+               for _ in range(4)]
+
+    def make_call(tiles):
+        # ONE engine per candidate: the jits compile during time_call's
+        # warmup run and every timed iteration measures warm serving speed
+        # (a fresh engine per call would retrace + recompile each time and
+        # the winner would be compile-latency noise)
+        eng = ServeEngine(
+            params, cfg, policy, n_slots=2, s_max=PAGED_S_MAX,
+            impl="jnp", prefill="chunked", prefill_chunk=SERVE_CHUNK,
+            cache="paged", page_size=int(tiles["ps"]))
+
+        def call():
+            return eng.run([Request(rid=i, prompt=p.copy(),
+                                    max_new=PAGED_MAX_NEW)
+                            for i, p in enumerate(prompts)])
+        return call
+
+    perm = tuning.perm_key(x_bits=policy.kv_cache_bits)
+    shape = tuning.shape_key(PAGED_S_MAX)
+    entry = tuning.autotune(
+        "kvpage", perm=perm, shape=shape, make_call=make_call,
+        cand=tuning.candidates("kvpage", M=PAGED_S_MAX), iters=2, warmup=1)
+    row = {
+        "name": "lm_kvpage_tune",
+        "kind": "kvpage_tune",
+        "arch": cfg.name,
+        "policy": policy.name,
+        "perm": perm,
+        "shape": shape,
+        "ps": int(entry["ps"]),
+        "us": entry.get("us"),
+        "source": entry.get("source", "autotune"),
+    }
+    csv_row("lm_kvpage_tune", entry.get("us") or 0.0,
+            f"ps={row['ps']};perm={perm};shape={shape}")
+    return [row]
+
+
 def run():
     rows = run_decode_bytes()
     rows += run_serve_prefill()
+    rows += run_paged_serving()
+    rows += run_kvpage_tune()
     emit_json("lm_serving", rows)
 
 

@@ -25,12 +25,19 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--impl", default="auto", choices=("auto", "pallas", "jnp"))
-    ap.add_argument("--scheduler", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=("fcfs", "spf", "bestfit"))
     ap.add_argument("--prefill", default="auto",
                     choices=("auto", "chunked", "stepwise"))
     ap.add_argument("--chunk", type=int, default=16,
                     help="chunked-prefill chunk size (jitted calls per "
                          "admission = ceil(prompt_len / chunk))")
+    ap.add_argument("--cache", default="slot", choices=("slot", "paged"),
+                    help="KV cache backend: dense per-slot stripes or the "
+                         "paged page pool + block tables")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per page (paged backend; default: tuned "
+                         "winner or the kvpage static default)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -42,7 +49,8 @@ def main():
 
     eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=64,
                       impl=args.impl, scheduler=args.scheduler,
-                      prefill=args.prefill, prefill_chunk=args.chunk)
+                      prefill=args.prefill, prefill_chunk=args.chunk,
+                      cache=args.cache, page_size=args.page_size)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(1, cfg.vocab, size=rng.randint(2, 6)).astype(np.int32),
@@ -57,6 +65,11 @@ def main():
           f"decode_steps={m['decode_steps']} tokens/s={m['tokens_per_s']:.1f} "
           f"ttft_avg={m['ttft_avg_s']*1e3:.1f}ms slot_resets={m['slot_resets']} "
           f"stragglers={m['stragglers']}")
+    if m["cache_backend"] == "paged":
+        print(f"paged cache: page_size={m['page_size']} "
+              f"pages={m['pages_free']}/{m['pages_total']} free "
+              f"util={m['page_utilization']:.2f} "
+              f"bytes/token={m['kv_bytes_per_token']:.1f}")
 
 
 if __name__ == "__main__":

@@ -176,6 +176,10 @@ def validate_coverage() -> None:
         for b in BITS:
             if b not in have_w:
                 missing.append(f"wdqmm[w={b}]@{impl}")
+        # the paged KV movers are storage-dtype-agnostic: one cell per backend
+        for op in ("paged_gather", "paged_scatter"):
+            if not coverage(op, impl):
+                missing.append(f"{op}@{impl}")
     if missing:
         raise RuntimeError(
             f"kernel matrix has {len(missing)} unregistered cells: {missing}"
@@ -273,6 +277,25 @@ def _register_library() -> None:
             fn=functools.partial(wdqmm_ref, w_bits=w_bits),
             name=f"wdqmm_i{w_bits}_ref",
         )
+    # paged KV cache movers (serve/cache.py page pool <-> logical rows).
+    # Storage-dtype-agnostic (int8 packed, f32 scales, bf16 latents alike),
+    # so a single cell per backend; the tunable knob is the page size itself,
+    # resolved through tuning op "kvpage" by the PagePool.
+    from repro.kernels.paged_gather import (
+        paged_gather_pallas,
+        paged_gather_ref,
+        paged_scatter_pallas,
+        paged_scatter_ref,
+    )
+
+    register("paged_gather", impl="pallas", fn=paged_gather_pallas,
+             name="paged_gather")
+    register("paged_gather", impl="jnp", fn=paged_gather_ref,
+             name="paged_gather_ref")
+    register("paged_scatter", impl="pallas", fn=paged_scatter_pallas,
+             name="paged_scatter")
+    register("paged_scatter", impl="jnp", fn=paged_scatter_ref,
+             name="paged_scatter_ref")
 
 
 _register_library()

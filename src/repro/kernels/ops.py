@@ -188,6 +188,37 @@ def wdqmm(
     return y[:M, :N]
 
 
+def paged_gather(
+    pool: jax.Array,  # (n_pages, page_size, ...) packed KV page pool
+    block_table: jax.Array,  # (B, n_blocks) int32 physical page ids
+    *,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Gather a paged KV pool into contiguous logical rows
+    (B, n_blocks * page_size, ...) — the paged decode read path."""
+    entry = dispatch.lookup("paged_gather", impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(pool, block_table)
+    return entry.fn(pool, block_table, interpret=_interpret())
+
+
+def paged_scatter(
+    pool: jax.Array,  # (n_pages, page_size, ...)
+    new: jax.Array,  # (B, S_new, ...) rows to write
+    pos: jax.Array,  # (B,) int32 logical write positions
+    block_table: jax.Array,  # (B, n_blocks) int32
+    *,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Scatter new token rows into the page pool through the block table —
+    the paged decode write path. Rows mapping outside the table (or onto
+    unallocated blocks, entry 0) land in the reserved scratch page."""
+    entry = dispatch.lookup("paged_scatter", impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(pool, new, pos, block_table)
+    return entry.fn(pool, new, pos, block_table, interpret=_interpret())
+
+
 # ------------------------------------------------------- quantize-and-pack IO
 
 

@@ -1,0 +1,146 @@
+"""Paged KV gather/scatter — page-pool cache blocks to/from logical rows.
+
+The paged cache stores quantized K/V in a global pool of fixed-size token
+pages ``(n_pages, page_size, ...)``; a per-slot block table maps a request's
+logical block index to its physical page. These kernels move packed pages
+between the pool and the contiguous logical view the attention math consumes:
+
+  * ``paged_gather``  — pool + block table -> ``(B, n_blocks * page_size,
+    ...)`` logical rows (the decode read path: one DMA per page, indexed via
+    a scalar-prefetched block table — the TPU analogue of vLLM's paged
+    attention gather, moving data at *quantized* width so the paper's
+    footprint win carries straight through to HBM traffic),
+  * ``paged_scatter`` — write one new token row per sequence into the pool
+    at ``block_table[b, pos // page_size], pos % page_size`` (the decode
+    write path; the pool is aliased in/out so untouched pages persist).
+
+Both ship the usual pair of backends: the Pallas kernel (interpret=True
+off-TPU) and a bit-exact jnp twin (plain XLA gather/scatter). Registered in
+kernels/dispatch.py; the *page size* itself resolves through kernels/tuning
+(op ``kvpage``) like any other tile parameter.
+
+Layout note: trailing dims are flattened to one feature axis F before the
+kernel (heads x packed-features for GQA, 1 x kv_lora for MLA latents, bare
+scales) — the page is the unit of transfer regardless of leaf rank.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _flatten_tail(a: jax.Array, lead: int) -> tuple[jax.Array, tuple[int, ...]]:
+    """Collapse all dims after the first ``lead`` into one feature axis."""
+    tail = a.shape[lead:]
+    f = math.prod(tail) if tail else 1
+    return a.reshape(*a.shape[:lead], f), tail
+
+
+# ------------------------------------------------------------------ gather
+
+
+def paged_gather_pallas(pool: jax.Array, block_table: jax.Array, *,
+                        interpret: bool = True) -> jax.Array:
+    """pool (P, ps, ...) gathered by block_table (B, NB) int32 ->
+    (B, NB * ps, ...). One grid step copies one page; the block table is
+    scalar-prefetched so the page index is known before the DMA issues."""
+    pool2, tail = _flatten_tail(pool, 2)
+    P_, ps, F = pool2.shape
+    B, NB = block_table.shape
+
+    def kernel(bt_ref, pool_ref, out_ref):
+        del bt_ref  # consumed by the index_map
+        out_ref[0, 0] = pool_ref[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, NB),
+        in_specs=[pl.BlockSpec((1, ps, F), lambda b, j, bt: (bt[b, j], 0, 0))],
+        out_specs=pl.BlockSpec((1, 1, ps, F), lambda b, j, bt: (b, j, 0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, NB, ps, F), pool.dtype),
+        interpret=interpret,
+        name="paged_gather",
+    )(block_table, pool2)
+    return out.reshape(B, NB * ps, *tail)
+
+
+def paged_gather_ref(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """jnp twin: plain XLA gather along the page axis."""
+    B, NB = block_table.shape
+    g = pool[block_table]  # (B, NB, ps, ...)
+    return g.reshape(B, NB * pool.shape[1], *pool.shape[2:])
+
+
+# ----------------------------------------------------------------- scatter
+
+
+def paged_scatter_pallas(pool: jax.Array, new: jax.Array, pos: jax.Array,
+                         block_table: jax.Array, *,
+                         interpret: bool = True) -> jax.Array:
+    """Write ``new`` (B, S_new, ...) into ``pool`` (P, ps, ...) at logical
+    position ``pos`` (B,) per sequence, through the block table. The pool is
+    aliased input->output, so pages outside the written rows persist; rows
+    whose block-table entry is the reserved scratch page (0) land in trash.
+    """
+    pool2, tail = _flatten_tail(pool, 2)
+    new2, _ = _flatten_tail(new.astype(pool.dtype), 2)
+    P_, ps, F = pool2.shape
+    B, S_new = new2.shape[:2]
+
+    def kernel(bt_ref, pos_ref, new_ref, pool_ref, out_ref):
+        del bt_ref, pos_ref, pool_ref  # routing handled by the index maps
+        out_ref[0, 0] = new_ref[0, 0]
+
+    def out_idx(b, s, bt, pos):
+        idx = pos[b] + s
+        blk = idx // ps
+        nb = bt.shape[1]
+        # rows past the block table trash-bin to the scratch page (0), the
+        # same drop semantics as the jnp twin's mode="fill" gather — a bare
+        # bt[b, blk] would CLAMP to the last real page and corrupt it
+        page = jnp.where(blk < nb, bt[b, jnp.minimum(blk, nb - 1)], 0)
+        return (page, idx % ps, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, S_new),
+        in_specs=[
+            pl.BlockSpec((1, 1, F), lambda b, s, bt, pos: (b, s, 0)),
+            pl.BlockSpec((1, 1, F), lambda b, s, bt, pos: (0, 0, 0)),
+        ],
+        # one (page, offset) token row per grid step — the offset axis is
+        # blocked at a single element so the index map addresses the row
+        out_specs=pl.BlockSpec((1, 1, F), out_idx),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P_, ps, F), pool.dtype),
+        # operand 2 == pool2 (after the two scalar-prefetch args)
+        input_output_aliases={3: 0},
+        interpret=interpret,
+        name="paged_scatter",
+    )(block_table, jnp.asarray(pos, jnp.int32), new2, pool2)
+    return out.reshape(pool.shape)
+
+
+def paged_scatter_ref(pool: jax.Array, new: jax.Array, pos: jax.Array,
+                      block_table: jax.Array) -> jax.Array:
+    """jnp twin: advanced-index scatter. Out-of-table block indices read as
+    the scratch page (mode="fill", fill 0), so overflow writes are trash-
+    binned exactly like the dense path's scatter-with-drop."""
+    ps = pool.shape[1]
+    B, S_new = new.shape[:2]
+    idx = jnp.asarray(pos, jnp.int32)[:, None] + jnp.arange(S_new, dtype=jnp.int32)[None]
+    page = block_table.at[jnp.arange(B)[:, None], idx // ps].get(
+        mode="fill", fill_value=0)
+    return pool.at[page, idx % ps].set(new.astype(pool.dtype))

@@ -40,6 +40,12 @@ STATIC_DEFAULTS: dict[str, dict[str, int]] = {
     # im2col+MatMul call gets bh*W rows tall); bh=1 is the pre-registry
     # one-row-per-step schedule.
     "conv2d": {"bh": 1},
+    # the paged KV cache's page size (tokens per page). Small pages waste
+    # less tail capacity per request (internal fragmentation ~ ps/2 tokens);
+    # large pages amortize gather/scatter grid steps — a tile trade-off, so
+    # it resolves through the same cache as the matmul blocks
+    # (serve.cache.PagedKVCache consults resolve_tiles("kvpage", ...)).
+    "kvpage": {"ps": 16},
 }
 
 #: Candidate menus per tunable axis. ops.py clamps to the (padded) problem
@@ -49,6 +55,7 @@ _BM_MENU = (8, 16, 32, 64, 128, 256)
 _BN_MENU = (32, 64, 128, 256)
 _BK_MENU = (64, 128, 256, 512)
 _BH_MENU = (1, 2, 4, 8)
+_PS_MENU = (4, 8, 16, 32, 64)
 
 
 def default_cache_dir() -> pathlib.Path:
@@ -193,6 +200,10 @@ def candidates(op: str, *, M: int, N: Optional[int] = None,
 
     if op == "qntpack":
         grid = [{"bm": bm} for bm in clamp(_BM_MENU, M, 8)]
+    elif op == "kvpage":
+        # M is the cache's s_max: pages larger than the whole sequence
+        # budget only add dead tail capacity
+        grid = [{"ps": ps} for ps in _PS_MENU if ps <= M]
     elif op == "conv2d":
         # M is the ofmap height here; ops.conv2d snaps bh to a divisor of H,
         # so non-dividing candidates would silently duplicate smaller ones.

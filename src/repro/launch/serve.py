@@ -25,10 +25,13 @@ def main():
     ap.add_argument("--s-max", type=int, default=128)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--scheduler", default="fcfs", choices=("fcfs", "spf"))
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=("fcfs", "spf", "bestfit"))
     ap.add_argument("--prefill", default="auto",
                     choices=("auto", "chunked", "stepwise"))
     ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--cache", default="slot", choices=("slot", "paged"))
+    ap.add_argument("--page-size", type=int, default=None)
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -39,7 +42,8 @@ def main():
     params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
     eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=args.s_max,
                       scheduler=args.scheduler, prefill=args.prefill,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk, cache=args.cache,
+                      page_size=args.page_size)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i, prompt=rng.randint(1, cfg.vocab, size=4).astype(np.int32),
                     max_new=args.max_new) for i in range(args.requests)]

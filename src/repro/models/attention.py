@@ -248,11 +248,22 @@ def cache_init(batch: int, s_max: int, kv_heads: int, head_dim: int,
     return {"k": zq, "k_s": zs, "v": zq, "v_s": zs}
 
 
-def seq_insert(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
-    """Write ``new`` (B, S_new, ...) into ``buf`` (B, S_max, ...) at sequence
-    position ``pos`` — scalar (all rows) or (B,) per-row (continuous
-    batching: every slot has its own write offset)."""
+def seq_insert(buf: jax.Array, new: jax.Array, pos: jax.Array, *,
+               block_table: Optional[jax.Array] = None,
+               impl: ops.Impl = "auto") -> jax.Array:
+    """Write ``new`` (B, S_new, ...) into ``buf`` at sequence position
+    ``pos`` — scalar (all rows) or (B,) per-row (continuous batching: every
+    slot has its own write offset).
+
+    Dense layout: ``buf`` is (B, S_max, ...), axis 1 is the sequence. Paged
+    layout (``block_table`` given): ``buf`` is a page pool (n_pages,
+    page_size, ...) — the page size is the pool's axis 1 — and the write
+    routes through the block table; rows on unallocated blocks (table entry
+    0) land in the reserved scratch page."""
     new = new.astype(buf.dtype)
+    if block_table is not None:
+        pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (new.shape[0],))
+        return ops.paged_scatter(buf, new, pos_b, block_table, impl=impl)
     if jnp.ndim(pos) == 0:
         return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, 1)
     B, S_new = new.shape[:2]
@@ -261,22 +272,41 @@ def seq_insert(buf: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
 
 
 def cache_update(cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array,
-                 bits: Optional[int]) -> dict:
+                 bits: Optional[int], *,
+                 block_table: Optional[jax.Array] = None,
+                 impl: ops.Impl = "auto") -> dict:
     """Insert new k/v (B, S_new, H, D) at ``pos`` (scalar or (B,))."""
     kq, ks = kv_quantize(k, bits)
     vq, vs = kv_quantize(v, bits)
+    pg = dict(block_table=block_table, impl=impl)
     out = dict(cache)
-    out["k"] = seq_insert(cache["k"], kq, pos)
-    out["v"] = seq_insert(cache["v"], vq, pos)
+    out["k"] = seq_insert(cache["k"], kq, pos, **pg)
+    out["v"] = seq_insert(cache["v"], vq, pos, **pg)
     if bits is not None:
-        out["k_s"] = seq_insert(cache["k_s"], ks, pos)
-        out["v_s"] = seq_insert(cache["v_s"], vs, pos)
+        out["k_s"] = seq_insert(cache["k_s"], ks, pos, **pg)
+        out["v_s"] = seq_insert(cache["v_s"], vs, pos, **pg)
     return out
 
 
-def cache_read(cache: dict, bits: Optional[int]):
-    k = kv_dequantize(cache["k"], cache.get("k_s"), bits)
-    v = kv_dequantize(cache["v"], cache.get("v_s"), bits)
+def cache_read(cache: dict, bits: Optional[int], *,
+               block_table: Optional[jax.Array] = None,
+               impl: ops.Impl = "auto"):
+    """Dequantized K/V. Dense: the (B, S_max, ...) buffers as stored. Paged:
+    each pool leaf is gathered through the block table into contiguous
+    (B, n_blocks * page_size, ...) logical rows FIRST (packed/int8 width —
+    the gather moves quantized bytes, never bf16), then dequantized; gather
+    and dequantize commute elementwise, so the result is bit-identical to
+    reading a dense cache holding the same rows."""
+    kq, ks = cache["k"], cache.get("k_s")
+    vq, vs = cache["v"], cache.get("v_s")
+    if block_table is not None:
+        kq = ops.paged_gather(kq, block_table, impl=impl)
+        vq = ops.paged_gather(vq, block_table, impl=impl)
+        if ks is not None:
+            ks = ops.paged_gather(ks, block_table, impl=impl)
+            vs = ops.paged_gather(vs, block_table, impl=impl)
+    k = kv_dequantize(kq, ks, bits)
+    v = kv_dequantize(vq, vs, bits)
     return k, v
 
 
@@ -310,6 +340,7 @@ def attn_apply(
     cache_pos: Optional[jax.Array] = None,
     kv_override: Optional[tuple[jax.Array, jax.Array]] = None,  # cross-attn
     attend_cached: bool = False,
+    block_table: Optional[jax.Array] = None,
 ):
     """Returns (y, new_cache). Prefill/train: cache None -> flash path.
     Decode: cache given, S == new tokens (typically 1).
@@ -317,7 +348,15 @@ def attn_apply(
     ``attend_cached`` forces the cache-read path even when S > 1 (chunked
     prefill: queries must see tokens cached by *earlier* chunks, and must
     read the same dequantized values the decode path reads so chunked and
-    token-by-token prefill are numerically identical)."""
+    token-by-token prefill are numerically identical).
+
+    ``block_table`` (B, n_blocks) switches the cache to the PAGED layout:
+    leaves are a (n_pages, page_size, ...) pool, writes scatter through the
+    table, reads gather the slot's pages into the same contiguous logical
+    rows the dense path stores — positions past a slot's write frontier are
+    causally masked to exactly-zero softmax weight, so whatever a recycled
+    page still holds can never reach the output and paged decode stays
+    bit-identical to the dense-slot path."""
     B, S, _ = x.shape
     lp_qkv = policy.of("attn_qkv")
     lp_out = policy.of("attn_out")
@@ -340,10 +379,17 @@ def attn_apply(
     new_cache = cache
     prefill = (cache is not None and S > 1 and kv_override is None
                and not attend_cached)
+    if block_table is not None and prefill:
+        raise NotImplementedError(
+            "whole-sequence prefill over a paged cache is unsupported — "
+            "prefill through model.prefill_into_pages (gather-row path) or "
+            "decode token-by-token")
     if cache is not None and kv_override is None:
-        new_cache = cache_update(cache, k, v, cache_pos, bits)
+        new_cache = cache_update(cache, k, v, cache_pos, bits,
+                                 block_table=block_table, impl=impl)
         if not prefill:
-            k, v = cache_read(new_cache, bits)
+            k, v = cache_read(new_cache, bits, block_table=block_table,
+                              impl=impl)
 
     if cache is None or prefill:
         # full-sequence: flash path. Prefill (cache_pos == 0) attends over the
@@ -432,11 +478,14 @@ def mla_apply(
     cache: Optional[dict] = None,
     cache_pos: Optional[jax.Array] = None,
     attend_cached: bool = False,
+    block_table: Optional[jax.Array] = None,
 ):
     """MLA. Train/prefill: unabsorbed full-head attention. Decode: absorbed
     path over the latent cache (c_kv, k_rope) — the MLA memory win.
     ``attend_cached`` forces the absorbed cache path even when S > 1
-    (chunked prefill; see attn_apply)."""
+    (chunked prefill; see attn_apply). ``block_table`` selects the paged
+    latent-cache layout (see attn_apply): c/r pool pages are gathered into
+    logical rows before the absorbed score, scattered on write."""
     from repro.models.common import rms_norm
 
     B, S, _ = x.shape
@@ -461,14 +510,20 @@ def mla_apply(
 
     prefill = cache is not None and S > 1 and not attend_cached
     new_cache = cache
+    if block_table is not None and prefill:
+        raise NotImplementedError(
+            "whole-sequence prefill over a paged cache is unsupported — "
+            "prefill through model.prefill_into_pages (gather-row path) or "
+            "decode token-by-token")
     if cache is not None:
         bits = policy.kv_cache_bits
+        pg = dict(block_table=block_table, impl=impl)
         ckv_q, ckv_s = kv_quantize(c_kv[:, :, None, :], bits)
         new_cache = dict(cache)
-        new_cache["c"] = seq_insert(cache["c"], ckv_q, cache_pos)
+        new_cache["c"] = seq_insert(cache["c"], ckv_q, cache_pos, **pg)
         if bits is not None:
-            new_cache["c_s"] = seq_insert(cache["c_s"], ckv_s, cache_pos)
-        new_cache["r"] = seq_insert(cache["r"], k_rope, cache_pos)
+            new_cache["c_s"] = seq_insert(cache["c_s"], ckv_s, cache_pos, **pg)
+        new_cache["r"] = seq_insert(cache["r"], k_rope, cache_pos, **pg)
 
     if cache is None or prefill:
         # unabsorbed: materialize per-head k_nope, v from c_kv (train/prefill)
@@ -479,8 +534,15 @@ def mla_apply(
         qf = jnp.concatenate([q_nope, q_rope], axis=-1)
         y = flash_attention(qf, k, v, causal=True)
     else:
-        c_all = kv_dequantize(new_cache["c"], new_cache.get("c_s"), bits)[:, :, 0]
+        c_buf, c_s = new_cache["c"], new_cache.get("c_s")
         r_all = new_cache["r"]  # (B, S_max, 1, d_rope) bf16
+        if block_table is not None:
+            # gather latent pages at stored (packed) width, dequantize after
+            c_buf = ops.paged_gather(c_buf, block_table, impl=impl)
+            if c_s is not None:
+                c_s = ops.paged_gather(c_s, block_table, impl=impl)
+            r_all = ops.paged_gather(r_all, block_table, impl=impl)
+        c_all = kv_dequantize(c_buf, c_s, bits)[:, :, 0]
 
         wkv_b = _mla_wkv_b_dense(params, cfg, lp).reshape(H, cfg.d_nope + cfg.d_v, cfg.kv_lora)
         w_uk, w_uv = wkv_b[:, : cfg.d_nope, :], wkv_b[:, cfg.d_nope :, :]

@@ -178,7 +178,7 @@ def _block_init(key, cfg: ArchConfig, policy, mode, dtype, *, kind: str) -> dict
 
 def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
                  cache=None, cache_pos=None, cross_kv=None, causal=True,
-                 attend_cached=False):
+                 attend_cached=False, block_tables=None):
     """Returns (x_out, new_cache, aux)."""
     _, nfn = _norm_fns(cfg)
     aux = jnp.zeros((), jnp.float32)
@@ -188,13 +188,15 @@ def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
             a, new_cache = mla_apply(params["attn"], h, pos, cfg.mla_cfg, policy,
                                      mode=mode, impl=impl, cache=cache,
                                      cache_pos=cache_pos,
-                                     attend_cached=attend_cached)
+                                     attend_cached=attend_cached,
+                                     block_table=block_tables)
         else:
             sc = None if cache is None else cache.get("self")
             a, sc_new = attn_apply(params["attn"], h, pos, cfg.attn_cfg, policy,
                                    mode=mode, impl=impl, causal=causal,
                                    cache=sc, cache_pos=cache_pos,
-                                   attend_cached=attend_cached)
+                                   attend_cached=attend_cached,
+                                   block_table=block_tables)
             new_cache = cache if cache is None else dict(cache, self=sc_new)
         x = x + a
         if kind == "dec":
@@ -319,9 +321,14 @@ def _remat_wrap(body, remat_policy: str):
 def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
                caches=None, cache_pos=None, cross_kv=None, causal=True,
                remat: bool = True, remat_policy: str = "full",
-               attend_cached: bool = False):
+               attend_cached: bool = False, block_tables=None):
     """Scan the grouped block stacks. caches: list matching groups (stacked
-    leading dim) or None. Returns (x, new_caches, aux_sum)."""
+    leading dim) or None. Returns (x, new_caches, aux_sum).
+
+    ``block_tables`` selects the paged cache layout: group cache leaves are
+    (count, n_pages, page_size, ...) pools shared by every slot, and the
+    per-slot (B, n_blocks) tables route reads/writes (closed over by the
+    scan body — they are layer-invariant)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_caches = []
     shared = params.get("shared_attn")
@@ -339,7 +346,7 @@ def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
             h2, nc, aux = _block_apply(
                 bp, h, pos, cfg, policy, kind=kind, mode=mode, impl=impl,
                 cache=bc, cache_pos=cache_pos, cross_kv=ckv, causal=causal,
-                attend_cached=attend_cached)
+                attend_cached=attend_cached, block_tables=block_tables)
             return (h2.astype(h.dtype), auxc + aux), nc
 
         body_fn = (_remat_wrap(body, remat_policy)
@@ -546,10 +553,17 @@ def prefill_step(params: dict, batch: dict, caches: list, cfg: ArchConfig,
 
 def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
                 cfg: ArchConfig, policy: PrecisionPolicy, *,
-                impl: ops.Impl = "auto"):
+                impl: ops.Impl = "auto",
+                block_tables: Optional[jax.Array] = None):
     """One serving step: tokens (B, S_new=1), pos = cache write position —
     scalar int32 (lockstep batch) or (B,) int32 (continuous batching, one
-    offset per slot). Returns (logits (B, S_new, V), new_caches)."""
+    offset per slot). Returns (logits (B, S_new, V), new_caches).
+
+    ``block_tables`` (B, n_blocks) switches the cache to the paged pool
+    layout (see init_paged_cache; the page size is each pool leaf's axis 2):
+    attention gathers each slot's pages into the same logical rows the
+    dense layout stores and scatters the new token's K/V through the table
+    — decoded tokens are bit-identical to the dense-slot path."""
     _, nfn = _norm_fns(cfg)
     mode = "serve"
     x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
@@ -560,7 +574,7 @@ def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
         pos_ids = jnp.broadcast_to(pos_ids[None], (3, B, S))
     x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
                                   impl=impl, caches=caches, cache_pos=pos,
-                                  remat=False)
+                                  remat=False, block_tables=block_tables)
     x = nfn(params["final_norm"], x)
     logits = linear_apply(params["head"], x, policy.of("head"), mode=mode, impl=impl)
     return logits, new_caches
@@ -572,6 +586,30 @@ def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
 #: the state unconditionally, so they must prefill token-by-token; encdec/vlm
 #: prefill needs the encoder/patch side-inputs forward() handles.
 PREFILL_CHUNKABLE_FAMILIES = ("dense", "moe", "mla_moe")
+
+#: Families whose caches can live in a paged page pool: every cache leaf is
+#: a position-indexed KV (or MLA latent) store, so "token row" is the unit
+#: of storage and pages are interchangeable. Recurrent-state families
+#: (hybrid/rwkv) carry O(1) per-slot state with no sequence axis — there is
+#: no paged analogue, they keep the dense-slot layout; encdec additionally
+#: owns a batch-indexed cross-attention cache.
+PAGEABLE_FAMILIES = ("dense", "moe", "mla_moe", "vlm")
+
+
+def init_paged_cache(cfg: ArchConfig, policy: PrecisionPolicy, n_pages: int,
+                     page_size: int) -> list:
+    """Paged KV pool: the same per-scan-group stacked trees as
+    :func:`init_cache`, with the (batch, s_max) slot stripes replaced by a
+    global (n_pages, page_size) page pool on every leaf — a page is
+    ``page_size`` token rows of quantized/packed K/V, assignable to any slot
+    via a block table. Page 0 is reserved by the serving cache manager as
+    the scratch page (unallocated block-table entries point at it)."""
+    if cfg.family not in PAGEABLE_FAMILIES:
+        raise NotImplementedError(
+            f"paged KV cache unsupported for family {cfg.family!r} "
+            f"(pageable: {PAGEABLE_FAMILIES}) — recurrent state has no "
+            f"token-row unit to page")
+    return init_cache(cfg, policy, n_pages, page_size)
 
 
 def prefill_chunk(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
@@ -661,4 +699,54 @@ def prefill_into_slot(params: dict, tokens: jax.Array, slot: jax.Array,
     new_caches = jax.tree.map(
         lambda full, r: jax.lax.dynamic_update_slice_in_dim(full, r, slot, 1),
         caches, row)
+    return logits, new_caches
+
+
+def prefill_into_pages(params: dict, tokens: jax.Array, block_row: jax.Array,
+                       pos: jax.Array, caches: list, cfg: ArchConfig,
+                       policy: PrecisionPolicy, *, page_size: int,
+                       last_idx: Optional[jax.Array] = None,
+                       head: bool = True,
+                       impl: ops.Impl = "auto"):
+    """Paged twin of :func:`prefill_into_slot`: chunk-prefill one request
+    whose cache rows live in a page pool. ``block_row`` is the request's
+    (n_blocks,) block table (traced int32; unallocated entries point at the
+    scratch page 0). The request's pages are gathered into one contiguous
+    (1, n_blocks * page_size, ...) logical row, :func:`prefill_chunk` runs
+    exactly as on the dense layout (so chunked-paged prefill is bit-
+    identical to chunked-dense), and the row is scattered back page by
+    page. Pad-scrub rows and the row's unwritten tail land back on the
+    pages they came from; blocks still mapping to the scratch page just
+    rewrite trash.
+
+    Cache leaves are (count, n_pages, page_size, ...); returns
+    (logits (1, 1, V), caches)."""
+    nb = block_row.shape[0]
+
+    def gather_row(a):
+        g = jnp.take(a, block_row, axis=1)  # (count, nb, ps, ...)
+        return g.reshape(a.shape[0], 1, nb * page_size, *a.shape[3:])
+
+    row = jax.tree.map(gather_row, caches)
+    # (1,) vector pos => scatter path with drop semantics, as in
+    # prefill_into_slot (right-padded chunks near capacity must not clamp)
+    pos_v = jnp.reshape(pos, (1,)).astype(jnp.int32)
+    logits, row = prefill_chunk(params, tokens, pos_v, row, cfg, policy,
+                                last_idx=last_idx, head=head, impl=impl)
+    if last_idx is not None:
+        # same pad scrub as prefill_into_slot: chunked == whole, bit for bit
+        S = tokens.shape[1]
+        row_idx = jnp.reshape(pos, ()) + jnp.arange(S, dtype=jnp.int32)
+        scrub_idx = jnp.where(jnp.arange(S) > last_idx, row_idx,
+                              jnp.int32(2**30))
+        row = jax.tree.map(
+            lambda a: a.at[:, :, scrub_idx].set(jnp.zeros((), a.dtype),
+                                                mode="drop"),
+            row)
+
+    def scatter_row(full, r):
+        r = r.reshape(full.shape[0], nb, page_size, *full.shape[3:])
+        return full.at[:, block_row].set(r)
+
+    new_caches = jax.tree.map(scatter_row, caches, row)
     return logits, new_caches

@@ -2,20 +2,30 @@
 
 Layering (each module owns one concern; the engine only composes):
 
-  * :mod:`repro.serve.cache`     — KV-slot cache manager (rows, positions,
-    recycling, capacity),
-  * :mod:`repro.serve.scheduler` — pluggable admission policy (fcfs / spf),
+  * :mod:`repro.serve.cache`     — KV cache managers: dense slot stripes
+    (``SlotCache``) or the paged page pool + block tables (``PagedKVCache``),
+  * :mod:`repro.serve.scheduler` — pluggable admission policy
+    (fcfs / spf / bestfit), page-budget aware,
   * :mod:`repro.serve.prefill`   — chunked/batched vs token-by-token prompt
-    ingestion,
+    ingestion (both cache backends),
+  * :mod:`repro.serve.boundary`  — host->jit copy discipline (host_copy),
   * :mod:`repro.serve.engine`    — the decode loop, streaming callbacks, and
     the metrics snapshot.
 """
 
-from repro.serve.cache import CapacityError, SlotCache
+from repro.serve.boundary import host_copy
+from repro.serve.cache import (
+    CACHE_BACKENDS,
+    CapacityError,
+    PagedKVCache,
+    SlotCache,
+    make_cache,
+)
 from repro.serve.engine import KernelStatsAccumulator, Request, ServeEngine, StepMonitor
 from repro.serve.prefill import ChunkedPrefill, StepwisePrefill, make_prefiller
 from repro.serve.scheduler import (
     SCHEDULERS,
+    BestFitScheduler,
     FCFSScheduler,
     Scheduler,
     ShortestPromptFirstScheduler,
@@ -23,9 +33,10 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
-    "CapacityError", "SlotCache",
+    "CACHE_BACKENDS", "CapacityError", "PagedKVCache", "SlotCache",
+    "host_copy", "make_cache",
     "KernelStatsAccumulator", "Request", "ServeEngine", "StepMonitor",
     "ChunkedPrefill", "StepwisePrefill", "make_prefiller",
-    "SCHEDULERS", "FCFSScheduler", "Scheduler",
+    "SCHEDULERS", "BestFitScheduler", "FCFSScheduler", "Scheduler",
     "ShortestPromptFirstScheduler", "make_scheduler",
 ]

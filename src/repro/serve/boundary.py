@@ -1,0 +1,28 @@
+"""Host/device boundary discipline for the serving loop.
+
+The PR-2 PSA, promoted to an API: on the CPU backend ``jnp.asarray(x)``
+ZERO-COPY-ALIASES a numpy buffer, and jax dispatch is asynchronous — so
+handing live host state (slot positions, block tables) to a jitted call and
+then mutating it on the host races with the in-flight computation. The seed
+engine's prefill loop had exactly this bug (advance ``slot_pos`` right after
+dispatching; nondeterministic tokens under load).
+
+Every host-side numpy value that is BOTH (a) fed to a jitted call and
+(b) mutated by the serving loop afterwards must cross the boundary through
+:func:`host_copy`. The copy is O(bytes of bookkeeping) — positions and block
+tables, never cache pages — and buys back determinism.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def host_copy(a) -> jnp.ndarray:
+    """Snapshot host state into a device array the caller may keep mutating.
+
+    ``np.array(a, copy=True)`` materializes a private buffer before
+    ``jnp.asarray`` can alias anything; the jitted callee then reads the
+    snapshot no matter what the serving loop does to ``a`` next."""
+    return jnp.asarray(np.array(a, copy=True))

@@ -1,35 +1,52 @@
-"""KV-slot cache manager: owns the model cache pytree, per-slot write
-positions, slot acquisition/recycling, and capacity checks against ``s_max``.
+"""KV cache managers: the dense slot backend and the paged page-pool backend.
 
-The cache is the model-zoo cache layout (models.model.init_cache): a list of
-per-scan-group trees whose leaves are stacked ``(count, n_slots, ...)`` — the
-slot axis is axis 1 on every leaf. The manager is the single owner of that
-pytree and of the ``pos`` vector the decode step consumes, so the engine,
-prefill strategies, and schedulers never touch cache internals directly (the
-seam later paged-cache / multi-engine PRs swap out).
+Both own the model cache pytree, the per-slot write positions the decode
+step consumes, slot acquisition/recycling, and capacity checks — the single
+seam between the engine/prefill/scheduler layers and cache internals.
 
-Recycling is EXPLICIT: :meth:`reset_slot` zeroes the slot's cache rows and
-resets its position (the pre-refactor engine silently rewound ``slot_pos`` and
-relied on the causal mask to hide stale rows — correct, but a property of the
-attention mask, not a guarantee of the cache layer).
+:class:`SlotCache` is the PR-2 layout: every slot reserves a contiguous
+``s_max`` stripe, so a short prompt wastes the whole tail of its stripe.
+
+:class:`PagedKVCache` is the paged layout (this PR's tentpole): one global
+pool of fixed-size token pages (``models.model.init_paged_cache``) plus a
+per-slot block table mapping logical block -> physical page. Capacity is a
+PAGE budget: a request holds only the pages its tokens actually occupy
+(rounded up to the page size), so effective concurrency at a fixed byte
+budget scales with both prompt-length slack and ``kv_cache_bits`` — the
+paper's footprint argument applied to serving. Page 0 is a reserved scratch
+page: unallocated block-table entries point at it, so transient writes from
+inactive slots (the stepwise-prefill idle lanes) land in trash instead of
+another request's pages.
+
+Admission discipline: :meth:`PagedKVCache.acquire` RESERVES the request's
+worst-case page count (prompt + max_new, rounded up) against the pool, and
+:meth:`prepare` draws physical pages on demand as the write frontier crosses
+page boundaries. Reservation keeps the no-mid-decode-eviction guarantee
+(an admitted request can always finish); on-demand drawing keeps the
+block-table honest about what is actually resident. Recycling is page-level
+and explicit: :meth:`reset_slot` zeroes the slot's pages (the "no stale
+K/V survives a recycle" guarantee, same as the dense backend) and returns
+every one of them to the free list.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import PrecisionPolicy
+from repro.kernels import tuning
 from repro.models import model as M
 from repro.models.model import ArchConfig
 
 
 class CapacityError(ValueError):
-    """A request can never fit a slot: prompt + max_new exceeds ``s_max``."""
+    """A request can never fit: prompt + max_new exceeds ``s_max`` (either
+    backend) or the whole page pool (paged backend)."""
 
 
 @functools.partial(jax.jit, donate_argnums=0)
@@ -40,8 +57,34 @@ def _zero_slot(caches, slot):
         lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)), caches)
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _zero_pages(caches, pages):
+    """Zero the pool pages listed in ``pages`` (fixed-length traced int32
+    vector — unused entries are padded with the scratch page 0, which is
+    trash by definition, so one compiled program serves every release)."""
+    return jax.tree.map(
+        lambda a: a.at[:, pages].set(jnp.zeros((), a.dtype)), caches)
+
+
+def _tree_bytes(caches) -> int:
+    """Total storage bytes across every cache leaf."""
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(caches))
+
+
+def _check_s_max(need: int, s_max: int) -> None:
+    """Shared reject-at-submit bound: ``need`` rows must fit one request's
+    sequence budget on either backend."""
+    if need > s_max:
+        raise CapacityError(
+            f"request needs {need} cache rows (prompt + max_new) but "
+            f"s_max={s_max}")
+
+
 class SlotCache:
     """Static-slot KV cache with per-slot write positions and occupancy."""
+
+    paged = False
+    page_size: Optional[int] = None
 
     def __init__(self, cfg: ArchConfig, policy: PrecisionPolicy,
                  n_slots: int, s_max: int):
@@ -64,10 +107,11 @@ class SlotCache:
         """Reject-at-submit capacity check: ``need`` tokens must fit a fresh
         slot. (The pre-refactor engine admitted anything and let cache writes
         clamp/corrupt; this makes the ``s_max`` bound a hard guarantee.)"""
-        if need > self.s_max:
-            raise CapacityError(
-                f"request needs {need} cache rows (prompt + max_new) but "
-                f"s_max={self.s_max}")
+        _check_s_max(need, self.s_max)
+
+    def can_admit(self, need: int) -> bool:
+        """Would :meth:`acquire` succeed right now for ``need`` tokens?"""
+        return need <= self.s_max and not all(self._busy)
 
     def acquire(self, need: int) -> Optional[int]:
         """Claim the lowest free slot for ``need`` new tokens, recycling it
@@ -94,6 +138,12 @@ class SlotCache:
 
     # --- positions / rows --------------------------------------------------
 
+    def prepare(self, slot: int, n: int) -> None:
+        """Make the next ``n`` token rows of ``slot`` writable. A no-op here
+        — the dense stripe pre-reserves every row — but the call is the
+        contract prefill/decode honor so the paged backend can allocate
+        pages on demand behind the same interface."""
+
     def advance(self, slot: int, n: int) -> None:
         self.pos[slot] += n
 
@@ -104,3 +154,236 @@ class SlotCache:
         self.caches = _zero_slot(self.caches, jnp.int32(slot))
         self.pos[slot] = 0
         self.resets += 1
+
+    # --- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        total = _tree_bytes(self.caches)
+        return {
+            "cache_backend": "slot",
+            "kv_bytes_total": total,
+            "kv_bytes_per_token": total / (self.n_slots * self.s_max),
+        }
+
+
+class PagedKVCache:
+    """Paged KV cache: global page pool + per-slot block tables.
+
+    Exposes the same manager interface as :class:`SlotCache` (acquire /
+    release / prepare / advance / reset_slot / check_admissible / pos /
+    caches), plus ``block_tables`` — the (n_slots, n_blocks) numpy array the
+    engine snapshots (via ``boundary.host_copy``) into every jitted decode.
+    """
+
+    paged = True
+
+    def __init__(self, cfg: ArchConfig, policy: PrecisionPolicy,
+                 n_slots: int, s_max: int, *,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
+        if cfg.family not in M.PAGEABLE_FAMILIES:
+            raise NotImplementedError(
+                f"paged KV cache unsupported for family {cfg.family!r} "
+                f"(pageable: {M.PAGEABLE_FAMILIES}); use the slot backend")
+        if page_size is None:
+            # the page size is a tile parameter: tuned winner (op "kvpage",
+            # keyed on the kv precision + sequence budget) or static default
+            t = tuning.resolve_tiles(
+                "kvpage",
+                perm=tuning.perm_key(x_bits=policy.kv_cache_bits),
+                shape=tuning.shape_key(s_max))
+            page_size = min(t["ps"], s_max)
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.cfg, self.policy = cfg, policy
+        self.n_slots, self.s_max = n_slots, s_max
+        self.page_size = page_size
+        self.n_blocks = -(-s_max // page_size)  # blocks per full-length slot
+        if n_pages is None:
+            # default: byte parity with the dense backend (+ scratch) — the
+            # capacity win then shows up as admissible concurrency, not as a
+            # smaller pool; benchmarks/deployments pass an explicit budget
+            n_pages = n_slots * self.n_blocks + 1
+        if n_pages < 2:
+            raise ValueError("n_pages must be >= 2 (scratch + 1 usable)")
+        self.n_pages = n_pages
+        self.caches = M.init_paged_cache(cfg, policy, n_pages, page_size)
+        self.block_tables = np.zeros((n_slots, self.n_blocks), np.int32)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.resets = 0
+        self._busy = [False] * n_slots
+        self._alloc = np.zeros(n_slots, np.int32)     # blocks drawn per slot
+        self._reserved = np.zeros(n_slots, np.int32)  # pages promised per slot
+        # page 0 is the scratch page; low ids are handed out first
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))
+
+    # --- page accounting ----------------------------------------------------
+
+    def pages_for(self, need: int) -> int:
+        return -(-need // self.page_size)
+
+    def pages_total(self) -> int:
+        """Allocatable pages (the scratch page is never handed out)."""
+        return self.n_pages - 1
+
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    def pages_allocated(self) -> int:
+        return int(self._alloc.sum())
+
+    def pages_available(self) -> int:
+        """Free pages not already promised to admitted requests. Admission
+        checks against THIS, so every admitted request can always draw its
+        reserved pages — no mid-decode exhaustion, ever."""
+        committed = sum(int(self._reserved[s] - self._alloc[s])
+                        for s in range(self.n_slots) if self._busy[s])
+        return len(self._free) - committed
+
+    # --- occupancy ---------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.n_slots) if not self._busy[s]]
+
+    def active_slots(self) -> int:
+        return sum(self._busy)
+
+    def check_admissible(self, need: int) -> None:
+        _check_s_max(need, self.s_max)
+        if self.pages_for(need) > self.pages_total():
+            raise CapacityError(
+                f"request needs {self.pages_for(need)} pages (prompt + "
+                f"max_new at page_size={self.page_size}) but the pool holds "
+                f"{self.pages_total()}")
+
+    def can_admit(self, need: int) -> bool:
+        """Free slot AND enough unpromised pages for the worst case. False
+        is a QUEUE signal (pages return as requests complete), never a
+        reject — :meth:`check_admissible` covers can-never-fit."""
+        return (not all(self._busy)
+                and self.pages_for(need) <= self.pages_available())
+
+    def acquire(self, need: int) -> Optional[int]:
+        """Claim the lowest free slot and reserve the request's worst-case
+        page count against the pool. None when no slot is free or the pool
+        cannot promise the pages right now (requeue and retry later)."""
+        self.check_admissible(need)
+        if not self.can_admit(need):
+            return None
+        for s in range(self.n_slots):
+            if self._busy[s]:
+                continue
+            if self.pos[s] != 0 or self._alloc[s]:
+                self.reset_slot(s)  # defensive; release() already recycles
+            self._busy[s] = True
+            self._reserved[s] = self.pages_for(need)
+            return s
+        return None
+
+    def release(self, slot: int) -> None:
+        """Completion: recycle the slot's pages back to the pool NOW — page
+        residency, not slot occupancy, is the capacity resource here, so
+        recycling cannot be deferred to the next acquire like the dense
+        backend does."""
+        self._busy[slot] = False
+        if self.pos[slot] or self._alloc[slot]:
+            self.reset_slot(slot)
+        else:
+            self._reserved[slot] = 0
+
+    # --- positions / pages --------------------------------------------------
+
+    def prepare(self, slot: int, n: int) -> None:
+        """On-demand allocation: draw pages from the free list until the
+        slot's table covers positions [0, pos + n). Admission reserved the
+        worst case, so the pool can always honor the draw."""
+        upto = int(self.pos[slot]) + n
+        if upto > self.s_max:
+            raise CapacityError(
+                f"slot {slot}: write frontier {upto} exceeds s_max={self.s_max}")
+        while int(self._alloc[slot]) * self.page_size < upto:
+            if not self._free:
+                raise RuntimeError(
+                    "page pool exhausted despite admission reservation — "
+                    "cache manager accounting bug")
+            page = self._free.pop()
+            self.block_tables[slot, int(self._alloc[slot])] = page
+            self._alloc[slot] += 1
+
+    def advance(self, slot: int, n: int) -> None:
+        self.pos[slot] += n
+
+    def reset_slot(self, slot: int) -> None:
+        """Explicit page-level recycle: zero the slot's pages (no stale K/V
+        outlives a recycle, same guarantee as the dense backend), return
+        every page to the free list, and clear the block-table row."""
+        n_alloc = int(self._alloc[slot])
+        if n_alloc:
+            pages = np.zeros(self.n_blocks, np.int32)  # pad with scratch
+            pages[:n_alloc] = self.block_tables[slot, :n_alloc]
+            self.caches = _zero_pages(self.caches, jnp.asarray(pages))
+            self._free.extend(int(p) for p in pages[:n_alloc])
+        self.block_tables[slot, :] = 0
+        self._alloc[slot] = 0
+        self._reserved[slot] = 0
+        self.pos[slot] = 0
+        self.resets += 1
+
+    # --- observability ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Page-pool health: utilization is written-rows / resident-rows
+        (its complement is internal fragmentation — page-tail waste), and
+        bytes-per-token is the pool's effective storage cost at the active
+        ``kv_cache_bits`` (what makes 4-bit KV hold ~4x the tokens of bf16
+        in the same budget)."""
+        total = _tree_bytes(self.caches)
+        used_rows = sum(int(self.pos[s]) for s in range(self.n_slots)
+                        if self._busy[s])
+        resident_rows = self.pages_allocated() * self.page_size
+        util = used_rows / resident_rows if resident_rows else 1.0
+        return {
+            "cache_backend": "paged",
+            "page_size": self.page_size,
+            "pages_total": self.pages_total(),
+            "pages_free": self.pages_free(),
+            "pages_allocated": self.pages_allocated(),
+            "pages_available": self.pages_available(),
+            "page_utilization": util,
+            "page_fragmentation": 1.0 - util,
+            "kv_bytes_total": total,
+            "kv_bytes_per_token": total / (self.n_pages * self.page_size),
+        }
+
+
+CACHE_BACKENDS: dict[str, type] = {
+    "slot": SlotCache,
+    "paged": PagedKVCache,
+}
+
+
+def make_cache(spec: Union[str, SlotCache, PagedKVCache, None],
+               cfg: ArchConfig, policy: PrecisionPolicy,
+               n_slots: int, s_max: int, *,
+               page_size: Optional[int] = None,
+               n_pages: Optional[int] = None):
+    """Resolve a cache-backend argument: name, instance, or None (-> slot).
+
+    Names resolve through :data:`CACHE_BACKENDS`, so registering a new
+    backend there is enough to make it engine-selectable. Registered
+    classes are constructed ``cls(cfg, policy, n_slots, s_max, page_size=,
+    n_pages=)`` — ``SlotCache`` is the one grandfathered signature without
+    the paging knobs."""
+    if spec is None:
+        spec = "slot"
+    if not isinstance(spec, str):
+        return spec
+    cls = CACHE_BACKENDS.get(spec)
+    if cls is None:
+        raise KeyError(
+            f"unknown cache backend {spec!r}; available: "
+            f"{sorted(CACHE_BACKENDS)}")
+    if cls is SlotCache:
+        return cls(cfg, policy, n_slots, s_max)
+    return cls(cfg, policy, n_slots, s_max,
+               page_size=page_size, n_pages=n_pages)

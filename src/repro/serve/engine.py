@@ -3,18 +3,28 @@
 The engine is a thin composition of the serving subsystem's three parts —
 this module owns ONLY the decode loop and observability:
 
-  * :class:`repro.serve.cache.SlotCache`     — cache rows, per-slot write
-    positions, recycling, ``s_max`` capacity checks;
+  * :mod:`repro.serve.cache`                 — cache rows/pages, per-slot
+    write positions, recycling, capacity checks. Backend-selected:
+    ``cache="slot"`` (dense per-slot stripes) or ``cache="paged"`` (global
+    page pool + block tables — admission becomes a free-PAGE budget, so
+    concurrency at a fixed byte budget scales with prompt-length slack and
+    ``kv_cache_bits``);
   * :class:`repro.serve.scheduler.Scheduler` — admission order (pluggable:
-    ``fcfs`` / ``spf`` / any Scheduler instance);
+    ``fcfs`` / ``spf`` / ``bestfit`` / any Scheduler instance);
   * :mod:`repro.serve.prefill`               — how prompts enter the cache
-    (batched/chunked via ``model.prefill_into_slot``, or token-by-token).
+    (batched/chunked via ``model.prefill_into_slot`` /
+    ``model.prefill_into_pages``, or token-by-token).
 
 Decode remains one jitted ``models.model.decode_step`` over ``n_slots``
 static slots with per-slot cache positions (continuous batching: admission
-happens while other slots keep decoding). ``metrics()`` snapshots TTFT,
-throughput, queue depth, and straggler counts for the deployment layer
-(examples/serve_batched.py, launch/serve.py).
+happens while other slots keep decoding); on the paged backend the block
+tables ride along as a snapshot argument. The FIRST output token of every
+request is sampled from the prefill's own last-token logits — the seed
+engine re-fed ``prompt[-1]`` as a decode step, spending one extra step and
+one duplicate cache row per admission and discarding the prefill logits.
+``metrics()`` snapshots TTFT, throughput, queue depth, page-pool health,
+and straggler counts for the deployment layer (examples/serve_batched.py,
+launch/serve.py).
 """
 
 from __future__ import annotations
@@ -32,7 +42,8 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels import dispatch
 from repro.models import model as M
 from repro.models.model import ArchConfig
-from repro.serve.cache import SlotCache
+from repro.serve.boundary import host_copy
+from repro.serve.cache import PagedKVCache, SlotCache, make_cache
 from repro.serve.prefill import make_prefiller
 from repro.serve.scheduler import Scheduler, make_scheduler
 
@@ -105,7 +116,10 @@ class ServeEngine:
                  n_slots: int = 4, s_max: int = 64, impl="auto",
                  greedy: bool = True,
                  scheduler: Union[str, Scheduler, None] = "fcfs",
-                 prefill: str = "auto", prefill_chunk: int = 16):
+                 prefill: str = "auto", prefill_chunk: int = 16,
+                 cache: Union[str, SlotCache, PagedKVCache, None] = "slot",
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
         self.params, self.cfg, self.policy = params, cfg, policy
         # fail at construction, not mid-decode, if the policy needs a kernel
         # cell outside the registered 27-permutation library
@@ -113,20 +127,27 @@ class ServeEngine:
         self.n_slots, self.s_max = n_slots, s_max
         self.impl = impl
         self.greedy = greedy
-        self.cache = SlotCache(cfg, policy, n_slots, s_max)
+        self.cache = make_cache(cache, cfg, policy, n_slots, s_max,
+                                page_size=page_size, n_pages=n_pages)
         self.scheduler = make_scheduler(scheduler)
         self.monitor = StepMonitor()
         self._kstats = KernelStatsAccumulator()
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_remaining = np.zeros(n_slots, np.int32)
 
-        self._decode = jax.jit(
-            lambda p, tok, pos, caches: M.decode_step(
-                p, tok, pos, caches, cfg, policy, impl=impl),
-            static_argnames=())
+        if self.cache.paged:
+            self._decode = jax.jit(
+                lambda p, tok, pos, bt, caches: M.decode_step(
+                    p, tok, pos, caches, cfg, policy, impl=impl,
+                    block_tables=bt))
+        else:
+            self._decode = jax.jit(
+                lambda p, tok, pos, caches: M.decode_step(
+                    p, tok, pos, caches, cfg, policy, impl=impl))
         self.prefiller = make_prefiller(
             prefill, params, cfg, policy, impl=impl, chunk=prefill_chunk,
-            step_fn=self._step, n_slots=n_slots)
+            step_fn=self._step, n_slots=n_slots,
+            page_size=self.cache.page_size if self.cache.paged else None)
 
         # metrics accumulators
         self._decode_steps = 0
@@ -158,76 +179,106 @@ class ServeEngine:
     def _step(self, toks: np.ndarray):
         """One decode step with per-slot cache positions (vector pos).
 
-        ``pos`` is passed as a COPY: ``jnp.asarray`` zero-copy-aliases numpy
-        buffers on the CPU backend, and dispatch is async — handing the live
-        ``cache.pos`` buffer to the decode while the caller then advances
-        positions is a data race (the pre-refactor engine's prefill loop hit
-        exactly this: mutate-after-dispatch, logits never consumed between
-        steps, nondeterministic tokens under load)."""
+        ``pos`` (and, on the paged backend, the block tables) crosses the
+        jit boundary through ``host_copy``: ``jnp.asarray`` zero-copy-aliases
+        numpy buffers on the CPU backend, and dispatch is async — handing
+        the live bookkeeping buffers to the decode while the caller then
+        advances positions / draws pages is a data race (the pre-refactor
+        engine's prefill loop hit exactly this: mutate-after-dispatch,
+        logits never consumed between steps, nondeterministic tokens under
+        load; see serve.boundary)."""
         t0 = time.perf_counter()
-        logits, self.cache.caches = self._decode(
-            self.params, jnp.asarray(toks), jnp.asarray(self.cache.pos.copy()),
-            self.cache.caches)
+        if self.cache.paged:
+            logits, self.cache.caches = self._decode(
+                self.params, jnp.asarray(toks), host_copy(self.cache.pos),
+                host_copy(self.cache.block_tables), self.cache.caches)
+        else:
+            logits, self.cache.caches = self._decode(
+                self.params, jnp.asarray(toks), host_copy(self.cache.pos),
+                self.cache.caches)
         self.monitor.observe(time.perf_counter() - t0)
         return logits
 
-    def _bind(self, slot: int, req: Request) -> None:
-        req.out = []
-        self.slot_req[slot] = req
-        self.slot_remaining[slot] = req.max_new
+    def _emit(self, slot: int, tok: int, results: dict,
+              on_token: Optional[Callable]) -> None:
+        """Record one generated token for the request bound to ``slot``,
+        completing and releasing the slot when its budget is spent."""
+        r = self.slot_req[slot]
+        r.out.append(tok)
+        self.slot_remaining[slot] -= 1
+        self._tokens_out += 1
+        if on_token:
+            on_token(r.rid, tok)
+        if self.slot_remaining[slot] <= 0:
+            results[r.rid] = r.out
+            self.slot_req[slot] = None
+            self.cache.release(slot)
+            self._completed += 1
 
-    def _admit(self) -> None:
-        """Admit waiting requests into free slots (continuous batching:
-        admission runs between decode steps, while other slots decode)."""
+    def _admit(self, results: dict, on_token: Optional[Callable]) -> None:
+        """Admit waiting requests into free capacity (continuous batching:
+        admission runs between decode steps, while other slots decode).
+
+        The scheduler picks under the cache's admission predicate — on the
+        paged backend that is the free-page budget, not just a free slot.
+        The FIRST output token is sampled here, from the prefill's own
+        last-token logits: the seed engine discarded them and re-fed
+        ``prompt[-1]`` as a decode step, costing one extra step and one
+        duplicate cache row per admission (ROADMAP open item, now closed).
+        """
+        fits = lambda r: self.cache.can_admit(len(r.prompt) + r.max_new)  # noqa: E731
         while self.scheduler.pending():
-            req = self.scheduler.next_request()
+            req = self.scheduler.next_request(fits)
             slot = self.cache.acquire(len(req.prompt) + req.max_new)
-            if slot is None:  # every slot busy: requeue at the front
+            if slot is None:  # no slot / page budget: requeue at the front
                 self.scheduler.requeue(req)
                 return
-            self.prefiller.prefill(self.cache, slot, req.prompt)
-            self._bind(slot, req)
+            logits = self.prefiller.prefill(self.cache, slot, req.prompt)
+            req.out = []
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new
+            now = time.perf_counter()
+            req.t_first = now
+            self._ttft.append(now - req.t_submit)
+            first = int(np.asarray(jnp.argmax(logits[0, -1])))
+            self._emit(slot, first, results, on_token)
 
     def _active(self) -> bool:
         return any(r is not None for r in self.slot_req)
 
     def run(self, requests: list[Request], *, on_token: Optional[Callable] = None):
         """Drive all requests to completion; returns {rid: [token, ...]}."""
+        # validate BEFORE marking a run active: a can-never-fit request must
+        # not leave _run_t0 set (metrics() would keep accruing elapsed time
+        # for a run that never happened)
+        for r in requests:
+            self.cache.check_admissible(len(r.prompt) + r.max_new)
         t_run = time.perf_counter()
         self._run_t0 = t_run
         for r in requests:
-            self.cache.check_admissible(len(r.prompt) + r.max_new)
             r.t_submit = t_run
         self.scheduler.submit(requests)
         results: dict[int, list[int]] = {}
         while self.scheduler.pending() or self._active():
-            self._admit()
-            # one decode step for every active slot
+            self._admit(results, on_token)
+            if not self._active():  # e.g. max_new=1 completes at admission
+                continue
+            # one decode step for every active slot: feed each slot's last
+            # generated token (never prompt[-1] — prefill already sampled
+            # the first token from its own logits)
             toks = np.zeros((self.n_slots, 1), np.int32)
             for s, r in enumerate(self.slot_req):
                 if r is not None:
-                    toks[s, 0] = (r.prompt[-1] if not r.out else r.out[-1])
+                    toks[s, 0] = r.out[-1]
+                    self.cache.prepare(s, 1)  # paged: draw the next page
             logits = self._step(toks)
             self._decode_steps += 1
             nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            now = time.perf_counter()
-            for s, r in enumerate(self.slot_req):
-                if r is None:
+            for s in range(self.n_slots):
+                if self.slot_req[s] is None:
                     continue
-                if not r.out:
-                    r.t_first = now
-                    self._ttft.append(now - r.t_submit)
-                r.out.append(int(nxt[s]))
                 self.cache.advance(s, 1)
-                self.slot_remaining[s] -= 1
-                self._tokens_out += 1
-                if on_token:
-                    on_token(r.rid, int(nxt[s]))
-                if self.slot_remaining[s] <= 0:
-                    results[r.rid] = r.out
-                    self.slot_req[s] = None
-                    self.cache.release(s)
-                    self._completed += 1
+                self._emit(s, int(nxt[s]), results, on_token)
             self._kstats.harvest()
         self._serve_seconds += time.perf_counter() - t_run
         self._run_t0 = None
@@ -236,16 +287,19 @@ class ServeEngine:
     # --- observability ------------------------------------------------------
 
     def metrics(self) -> dict:
-        """Serving metrics snapshot: latency (TTFT), throughput, backlog, and
-        the straggler count from the StepMonitor — the numbers a deployment
-        scrapes (examples/serve_batched.py prints this). Safe to call
-        mid-run (e.g. from an on_token callback): the active run's elapsed
-        time is included in the throughput denominator."""
+        """Serving metrics snapshot: latency (TTFT), throughput, backlog,
+        cache-backend health (page utilization / fragmentation / effective
+        bytes-per-token on the paged backend), and the straggler count from
+        the StepMonitor — the numbers a deployment scrapes
+        (examples/serve_batched.py prints this). Safe to call mid-run (e.g.
+        from an on_token callback): the active run's elapsed time is
+        included in the throughput denominator."""
         elapsed = self._serve_seconds
         if self._run_t0 is not None:
             elapsed += time.perf_counter() - self._run_t0
         elapsed = max(elapsed, 1e-9)
         return {
+            **self.cache.stats(),
             "requests_completed": self._completed,
             "tokens_generated": self._tokens_out,
             "tokens_per_s": self._tokens_out / elapsed,

@@ -1,24 +1,30 @@
-"""Prefill strategies: how a request's prompt gets written into its cache slot.
+"""Prefill strategies: how a request's prompt gets written into its cache.
 
 ``ChunkedPrefill`` is the batched path: the prompt is split into fixed-size
-chunks and each chunk lowers through ``model.prefill_into_slot`` — ONE jitted
-call that embeds, attends (through the cache, so later chunks see earlier
-ones), and scatters the quantized K/V into the target slot's cache row. A
-prompt of length S costs ceil(S / chunk) jitted calls touching one slot,
-versus S full ``(n_slots, 1)`` decode steps on the pre-refactor path. The
-chunk size is fixed, so there is exactly one trace regardless of prompt
-length; the final chunk is right-padded and ``last_idx`` selects the real
-last-token logits (padded tail writes are masked until overwritten — see
-``model.prefill_chunk``).
+chunks and each chunk lowers through ONE jitted call that embeds, attends
+(through the cache, so later chunks see earlier ones), and scatters the
+quantized K/V into the request's cache rows — ``model.prefill_into_slot``
+against the dense slot backend, ``model.prefill_into_pages`` against the
+paged backend (the request's block-table row is a traced argument, so one
+trace serves every page assignment). A prompt of length S costs
+ceil(S / chunk) jitted calls, versus S full ``(n_slots, 1)`` decode steps on
+the pre-refactor path. The chunk size is fixed, so there is exactly one
+trace (per backend) regardless of prompt length; the final chunk is
+right-padded and ``last_idx`` selects the real last-token logits.
 
 ``StepwisePrefill`` is that pre-refactor path, kept as (a) the fallback for
 recurrent-state families whose caches absorb every token unconditionally and
 (b) the bit-exactness regression baseline the chunked path is tested against.
+
+Both strategies call ``cache.prepare(slot, n)`` before writing n rows — the
+paged backend draws physical pages on demand there — and RETURN the last
+real prompt token's logits, which the engine now samples the first output
+token from (no duplicate ``prompt[-1]`` decode step; see ServeEngine).
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,16 +33,17 @@ import numpy as np
 from repro.core.policy import PrecisionPolicy
 from repro.models import model as M
 from repro.models.model import ArchConfig
-from repro.serve.cache import SlotCache
+from repro.serve.boundary import host_copy
 
 
 class ChunkedPrefill:
-    """Single-slot batched/chunked prefill via ``model.prefill_into_slot``."""
+    """Single-request batched/chunked prefill (slot or paged backend)."""
 
     name = "chunked"
 
     def __init__(self, params, cfg: ArchConfig, policy: PrecisionPolicy, *,
-                 impl="auto", chunk: int = 16):
+                 impl="auto", chunk: int = 16,
+                 page_size: Optional[int] = None):
         if not self.supports(cfg):
             raise NotImplementedError(
                 f"chunked prefill unsupported for family {cfg.family!r} "
@@ -46,23 +53,36 @@ class ChunkedPrefill:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.params = params
         self.chunk = chunk
+        self.page_size = page_size
         self.jit_calls = 0  # jitted prefill invocations (the O(S/chunk) claim)
         # two traces: non-final chunks only fill the cache (no final-norm /
-        # vocab-head matmul); the final chunk also returns last-token logits
-        self._fn_last = jax.jit(
-            lambda p, toks, slot, pos, last, caches: M.prefill_into_slot(
-                p, toks, slot, pos, caches, cfg, policy, last_idx=last,
-                impl=impl))
-        self._fn_mid = jax.jit(
-            lambda p, toks, slot, pos, caches: M.prefill_into_slot(
-                p, toks, slot, pos, caches, cfg, policy, head=False,
-                impl=impl))
+        # vocab-head matmul); the final chunk also returns last-token logits.
+        # `ref` is the request's cache address: slot index (dense) or the
+        # slot's block-table row (paged) — same argument slot either way.
+        if page_size is None:
+            self._fn_last = jax.jit(
+                lambda p, toks, ref, pos, last, caches: M.prefill_into_slot(
+                    p, toks, ref, pos, caches, cfg, policy, last_idx=last,
+                    impl=impl))
+            self._fn_mid = jax.jit(
+                lambda p, toks, ref, pos, caches: M.prefill_into_slot(
+                    p, toks, ref, pos, caches, cfg, policy, head=False,
+                    impl=impl))
+        else:
+            self._fn_last = jax.jit(
+                lambda p, toks, ref, pos, last, caches: M.prefill_into_pages(
+                    p, toks, ref, pos, caches, cfg, policy, last_idx=last,
+                    page_size=page_size, impl=impl))
+            self._fn_mid = jax.jit(
+                lambda p, toks, ref, pos, caches: M.prefill_into_pages(
+                    p, toks, ref, pos, caches, cfg, policy, head=False,
+                    page_size=page_size, impl=impl))
 
     @staticmethod
     def supports(cfg: ArchConfig) -> bool:
         return cfg.family in M.PREFILL_CHUNKABLE_FAMILIES
 
-    def prefill(self, cache: SlotCache, slot: int, prompt: np.ndarray):
+    def prefill(self, cache, slot: int, prompt: np.ndarray):
         """Write ``prompt`` into ``slot`` starting at its current position.
         Returns the last real prompt token's logits (1, 1, V)."""
         S = len(prompt)
@@ -72,7 +92,13 @@ class ChunkedPrefill:
             n = min(self.chunk, S - off)
             toks = np.zeros((1, self.chunk), np.int32)
             toks[0, :n] = prompt[off : off + n]
-            args = (self.params, jnp.asarray(toks), jnp.int32(slot),
+            cache.prepare(slot, n)  # paged backend draws pages on demand
+            # the block-table row crosses the jit boundary as a SNAPSHOT
+            # (host_copy): prepare() for the next chunk mutates the live
+            # table while this chunk's dispatch may still be in flight
+            ref = (host_copy(cache.block_tables[slot]) if cache.paged
+                   else jnp.int32(slot))
+            args = (self.params, jnp.asarray(toks), ref,
                     jnp.int32(cache.pos[slot]))
             if off + n >= S:  # final chunk: last-token logits + pad scrub
                 logits, cache.caches = self._fn_last(
@@ -90,8 +116,9 @@ class StepwisePrefill:
 
     ``step_fn`` is the engine's jitted ``(n_slots, 1)`` decode (other slots
     receive token 0; their write positions do not advance, so any transient
-    row writes are overwritten by their next real step). This is the
-    pre-refactor data path, byte for byte.
+    row writes are overwritten by their next real step — or, on the paged
+    backend, land in the scratch page their unallocated block-table entries
+    point at). This is the pre-refactor data path, byte for byte.
     """
 
     name = "stepwise"
@@ -106,11 +133,12 @@ class StepwisePrefill:
     def supports(cfg: ArchConfig) -> bool:
         return True
 
-    def prefill(self, cache: SlotCache, slot: int, prompt: np.ndarray):
+    def prefill(self, cache, slot: int, prompt: np.ndarray):
         logits = None
         for tok in prompt:
             toks = np.zeros((self.n_slots, 1), np.int32)
             toks[slot, 0] = tok
+            cache.prepare(slot, 1)
             logits = self._step(toks)
             cache.advance(slot, 1)
             self.jit_calls += 1
@@ -119,13 +147,17 @@ class StepwisePrefill:
 
 def make_prefiller(mode: str, params, cfg: ArchConfig,
                    policy: PrecisionPolicy, *, impl, chunk: int,
-                   step_fn: Callable, n_slots: int):
+                   step_fn: Callable, n_slots: int,
+                   page_size: Optional[int] = None):
     """Resolve the prefill strategy: ``auto`` picks chunked when the family
-    supports it and falls back to stepwise (hybrid/rwkv/encdec/vlm)."""
+    supports it and falls back to stepwise (hybrid/rwkv/encdec/vlm).
+    ``page_size`` (set by the engine when the cache backend is paged) makes
+    the chunked path lower through the page pool."""
     if mode == "auto":
         mode = "chunked" if ChunkedPrefill.supports(cfg) else "stepwise"
     if mode == "chunked":
-        return ChunkedPrefill(params, cfg, policy, impl=impl, chunk=chunk)
+        return ChunkedPrefill(params, cfg, policy, impl=impl, chunk=chunk,
+                              page_size=page_size)
     if mode == "stepwise":
         return StepwisePrefill(step_fn, n_slots)
     raise ValueError(f"unknown prefill mode {mode!r} "

@@ -1,20 +1,33 @@
 """Pluggable admission scheduling for the serving engine.
 
 A :class:`Scheduler` owns the waiting-request queue and decides which request
-is admitted when a cache slot frees up (continuous batching admits mid-decode,
-so this runs on every engine step). The engine only sees three verbs — submit,
-pending, next_request — which is the seam async admission and multi-engine
-routing PRs extend.
+is admitted when capacity frees up (continuous batching admits mid-decode,
+so this runs on every engine step). The engine only sees four verbs — submit,
+pending, next_request, requeue — which is the seam async admission and
+multi-engine routing PRs extend.
 
-Two policies prove the interface:
-  * ``fcfs`` — first-come-first-served, the pre-refactor behavior,
-  * ``spf``  — shortest-prompt-first: minimizes mean TTFT when prompt lengths
-    are skewed (short interactive prompts stop queueing behind long ones).
+Since the paged-cache refactor, admission capacity is a PAGE budget, not a
+slot count: the engine passes ``next_request`` a ``fits`` predicate ("would
+the cache admit this request right now?") built from the free-page count.
+Policies may consult it (best-fit packs the pool) or ignore it (fcfs/spf
+preserve strict ordering; a non-fitting pick simply requeues and waits).
+
+Three policies prove the interface:
+  * ``fcfs``    — first-come-first-served, the pre-refactor behavior,
+  * ``spf``     — shortest-prompt-first: minimizes mean TTFT when prompt
+    lengths are skewed (short interactive prompts stop queueing behind
+    long ones),
+  * ``bestfit`` — largest waiting request that still fits the current page
+    budget: packs the page pool under mixed request sizes instead of
+    head-of-line blocking behind a request the pool cannot hold yet.
 """
 
 from __future__ import annotations
 
-from typing import Sequence, Union
+from typing import Callable, Optional, Sequence, Union
+
+#: fits(request) -> bool: "would the cache admit this request right now?"
+FitsFn = Callable[[object], bool]
 
 
 class Scheduler:
@@ -31,17 +44,19 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
-    def pick(self) -> int:
-        """Index into the queue of the next request to admit."""
+    def pick(self, fits: Optional[FitsFn] = None) -> int:
+        """Index into the queue of the next request to admit. ``fits`` is
+        the engine's capacity predicate; ordering-strict policies ignore it."""
         raise NotImplementedError
 
-    def next_request(self):
+    def next_request(self, fits: Optional[FitsFn] = None):
         if not self._queue:
             return None
-        return self._queue.pop(self.pick())
+        return self._queue.pop(self.pick(fits))
 
     def requeue(self, request) -> None:
-        """Put a popped request back at the head (admission found no slot)."""
+        """Put a popped request back at the head (admission found no slot
+        or page budget for it — it keeps its place in line)."""
         self._queue.insert(0, request)
 
 
@@ -50,7 +65,7 @@ class FCFSScheduler(Scheduler):
 
     name = "fcfs"
 
-    def pick(self) -> int:
+    def pick(self, fits: Optional[FitsFn] = None) -> int:
         return 0
 
 
@@ -59,14 +74,38 @@ class ShortestPromptFirstScheduler(Scheduler):
 
     name = "spf"
 
-    def pick(self) -> int:
+    def pick(self, fits: Optional[FitsFn] = None) -> int:
         return min(range(len(self._queue)),
                    key=lambda i: (len(self._queue[i].prompt), i))
+
+
+class BestFitScheduler(Scheduler):
+    """Admit the LARGEST waiting request the current page budget can hold
+    (classic best-fit packing; ties: arrival order). Requests too big for
+    the budget right now are skipped, not blocked on — they admit when
+    completions return their pages. Falls back to head-of-line when nothing
+    fits (the engine requeues the pick and waits) or when no ``fits``
+    predicate is supplied."""
+
+    name = "bestfit"
+
+    @staticmethod
+    def _size(req) -> int:
+        return len(req.prompt) + getattr(req, "max_new", 0)
+
+    def pick(self, fits: Optional[FitsFn] = None) -> int:
+        if fits is None:
+            return 0
+        fitting = [i for i, r in enumerate(self._queue) if fits(r)]
+        if not fitting:
+            return 0
+        return max(fitting, key=lambda i: (self._size(self._queue[i]), -i))
 
 
 SCHEDULERS: dict[str, type] = {
     FCFSScheduler.name: FCFSScheduler,
     ShortestPromptFirstScheduler.name: ShortestPromptFirstScheduler,
+    BestFitScheduler.name: BestFitScheduler,
 }
 
 

@@ -1,0 +1,315 @@
+"""Paged KV cache tests (fast tier + slow sweep): page alloc/free lifecycle,
+page-level recycling, fragmentation accounting under mixed prompt lengths,
+paged==dense bit-exactness (per attention family, per kv_cache_bits),
+admission under page exhaustion (graceful queueing, CapacityError only for
+can-never-fit), the paged gather/scatter kernel pair (pallas vs jnp twin),
+and the serve.boundary host-copy regression for the zero-copy-alias PSA."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import get_policy
+from repro.kernels import paged_gather as PG
+from repro.models import model as M
+from repro.serve import (
+    CapacityError,
+    PagedKVCache,
+    Request,
+    ServeEngine,
+    host_copy,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = configs.reduced(configs.get_arch("internlm2-1.8b"))
+POLICY = get_policy("w4a8")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.key(3), TINY, POLICY, mode="serve")
+
+
+def _requests(lengths, max_new=4, seed=0, vocab=None):
+    rng = np.random.RandomState(seed)
+    vocab = vocab or TINY.vocab
+    return [Request(rid=i,
+                    prompt=rng.randint(1, vocab, size=n).astype(np.int32),
+                    max_new=max_new)
+            for i, n in enumerate(lengths)]
+
+
+# ------------------------------------------------------ page-pool lifecycle
+
+
+def test_page_alloc_free_lifecycle():
+    """Pages are drawn on demand as the write frontier crosses page
+    boundaries, and reset returns every one of them (zeroed)."""
+    cache = PagedKVCache(TINY, POLICY, n_slots=2, s_max=16, page_size=4)
+    assert cache.pages_total() == 2 * 4  # byte parity with the dense layout
+    assert cache.pages_free() == 8 and cache.pages_allocated() == 0
+
+    slot = cache.acquire(10)  # reserves ceil(10/4) = 3 pages
+    assert slot == 0 and cache.pages_available() == 5
+
+    cache.prepare(slot, 5)  # frontier 5 -> 2 pages resident
+    assert cache.pages_allocated() == 2 and cache.pages_free() == 6
+    assert list(cache.block_tables[slot, :2]) == [1, 2]  # scratch 0 never used
+    assert cache.block_tables[slot, 2] == 0  # unallocated -> scratch
+    cache.advance(slot, 5)
+    cache.prepare(slot, 4)  # frontier 9 -> 3rd page
+    assert cache.pages_allocated() == 3
+
+    # recycling returns ALL pages and zeroes them
+    cache.release(slot)
+    assert cache.pages_free() == 8 and cache.pages_allocated() == 0
+    assert cache.resets == 1
+    assert not cache.block_tables.any() and not cache.pos.any()
+    for leaf in jax.tree.leaves(cache.caches):
+        assert not np.asarray(leaf).any()
+
+
+def test_page_budget_admission_accounting():
+    """can_admit charges RESERVED (not yet drawn) pages against the pool, so
+    an admitted request can never be starved of its pages mid-decode."""
+    cache = PagedKVCache(TINY, POLICY, n_slots=4, s_max=16, page_size=4,
+                         n_pages=7)  # 6 usable pages
+    s0 = cache.acquire(16)  # reserves 4
+    assert s0 is not None and cache.pages_available() == 2
+    assert not cache.can_admit(12)  # would need 3, only 2 unpromised
+    assert cache.can_admit(8)
+    s1 = cache.acquire(8)
+    assert s1 is not None and cache.pages_available() == 0
+    assert cache.acquire(4) is None  # queue signal, not an error
+    # completing s0 returns its promise
+    cache.release(s0)
+    assert cache.can_admit(16)
+
+
+def test_never_fitting_request_raises():
+    cache = PagedKVCache(TINY, POLICY, n_slots=2, s_max=64, page_size=4,
+                         n_pages=5)  # 4 usable pages = 16 rows max
+    with pytest.raises(CapacityError, match="pages"):
+        cache.check_admissible(20)  # fits s_max, can never fit the pool
+    with pytest.raises(CapacityError, match="s_max"):
+        cache.check_admissible(65)
+
+
+def test_fragmentation_under_mixed_prompt_lengths(params):
+    """Mixed prompt lengths leave page-tail waste; the stats must account
+    for it exactly: resident pages = sum(ceil(len/ps)), utilization =
+    written rows / resident rows, and completion returns everything."""
+    eng = ServeEngine(params, TINY, POLICY, n_slots=3, s_max=32, impl="jnp",
+                      prefill="chunked", prefill_chunk=4,
+                      cache="paged", page_size=8)
+    seen = {}
+
+    def on_token(rid, _tok):
+        if rid not in seen:  # snapshot pool health right after each prefill
+            seen[rid] = eng.metrics()
+
+    lengths = (9, 2, 5)  # 2, 1, 1 pages of 8 -> tails of 7, 6, 3 rows
+    out = eng.run(_requests(lengths, max_new=1), on_token=on_token)
+    assert sorted(out) == [0, 1, 2]
+    m3 = seen[2]  # all three admitted (max_new=1, nothing released yet... )
+    # every admission happened before any decode: pools snapshot at rid=2
+    # has all three prompts resident (+1 first token each, max_new=1 means
+    # completion at admission — rid 0 and 1 already released)
+    m = eng.metrics()
+    assert m["cache_backend"] == "paged"
+    assert m["pages_allocated"] == 0 and m["pages_free"] == m["pages_total"]
+    assert 0.0 <= m3["page_fragmentation"] < 1.0
+    # a half-written pool mid-run: utilization strictly accounts tails
+    eng2 = ServeEngine(params, TINY, POLICY, n_slots=3, s_max=32, impl="jnp",
+                       prefill="chunked", prefill_chunk=4,
+                       cache="paged", page_size=8)
+    eng2.cache.acquire(9 + 4)
+    eng2.cache.prepare(0, 9)
+    eng2.cache.advance(0, 9)
+    st = eng2.cache.stats()
+    assert st["pages_allocated"] == 2
+    assert st["page_utilization"] == pytest.approx(9 / 16)
+    assert st["page_fragmentation"] == pytest.approx(7 / 16)
+
+
+def test_admission_under_page_exhaustion_queues_gracefully(params):
+    """A pool holding one request at a time still completes a burst of
+    fitting requests (queueing, never CapacityError), and slot_resets
+    counts the page recycles."""
+    eng = ServeEngine(params, TINY, POLICY, n_slots=2, s_max=16, impl="jnp",
+                      prefill="chunked", prefill_chunk=4,
+                      cache="paged", page_size=4, n_pages=4)  # 3 usable
+    out = eng.run(_requests((8, 8, 8), max_new=3))  # each needs 3 pages
+    assert sorted(out) == [0, 1, 2]
+    assert all(len(v) == 3 for v in out.values())
+    assert eng.metrics()["slot_resets"] == 3  # every completion recycled
+    assert eng.cache.pages_free() == 3
+
+
+# ------------------------------------------------- paged == dense bit-exact
+
+#: (arch, policy) cells: attention family x kv_cache_bits {None, 8, 4}.
+FAST_CELLS = [
+    ("internlm2-1.8b", "bf16"),    # dense GQA, bf16 KV
+    ("internlm2-1.8b", "w4a8"),    # dense GQA, int8 KV
+    ("internlm2-1.8b", "w4a8kv4"), # dense GQA, packed int4 KV
+    ("deepseek-v3-671b", "w4a8"),  # MLA latent cache (absorbed decode)
+]
+SLOW_CELLS = [
+    ("granite-moe-1b-a400m", "w4a8"),   # MoE blocks over paged KV
+    ("h2o-danube-1.8b", "w4a8kv4"),     # sliding-window mask + int4 pages
+    ("deepseek-v3-671b", "w4a8kv4"),    # MLA + packed int4 latents
+    ("deepseek-v3-671b", "bf16"),       # MLA bf16
+]
+
+
+def _paired_outputs(arch, pol_name, *, prefill="auto"):
+    cfg = configs.reduced(configs.get_arch(arch))
+    pol = get_policy(pol_name)
+    p = M.init_params(jax.random.key(1), cfg, pol, mode="serve")
+    lengths = (3, 9, 5, 2)
+    kw = dict(n_slots=2, s_max=24, impl="jnp", prefill=prefill,
+              prefill_chunk=4)
+    dense = ServeEngine(p, cfg, pol, cache="slot", **kw)
+    out_d = dense.run(_requests(lengths, vocab=cfg.vocab))
+    paged = ServeEngine(p, cfg, pol, cache="paged", page_size=4, **kw)
+    out_p = paged.run(_requests(lengths, vocab=cfg.vocab))
+    return out_d, out_p
+
+
+@pytest.mark.parametrize("arch,pol", FAST_CELLS)
+def test_paged_decode_bit_identical_to_dense(arch, pol):
+    """The acceptance regression: decoded tokens from the paged backend
+    equal the dense-slot backend's, token for token, across attention
+    families and kv_cache_bits in {None, 8, 4}."""
+    out_d, out_p = _paired_outputs(arch, pol)
+    assert out_d == out_p
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,pol", SLOW_CELLS)
+def test_paged_decode_bit_identical_to_dense_full(arch, pol):
+    out_d, out_p = _paired_outputs(arch, pol)
+    assert out_d == out_p
+
+
+def test_paged_stepwise_prefill_bit_identical(params):
+    """Paged + stepwise prefill (the recurrent-family-style path over a
+    pageable family) matches dense + stepwise: transient idle-lane writes
+    land in the scratch page, never in another request's pages."""
+    out_d, out_p = _paired_outputs("internlm2-1.8b", "w4a8",
+                                   prefill="stepwise")
+    assert out_d == out_p
+
+
+def test_paged_rejects_recurrent_families():
+    hyb = configs.reduced(configs.get_arch("zamba2-1.2b"))
+    pol = get_policy("w4a8")
+    with pytest.raises(NotImplementedError, match="paged"):
+        PagedKVCache(hyb, pol, n_slots=2, s_max=16, page_size=4)
+
+
+# ------------------------------------------------ gather/scatter kernel pair
+
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.float32, jnp.bfloat16])
+def test_paged_gather_scatter_pallas_matches_ref(dtype):
+    rng = np.random.RandomState(0)
+    pool = jnp.asarray(rng.randint(-100, 100, size=(7, 4, 2, 6))).astype(dtype)
+    bt = jnp.asarray(np.array([[3, 1, 0], [2, 5, 6]], np.int32))
+    g_ref = PG.paged_gather_ref(pool, bt)
+    g_pal = PG.paged_gather_pallas(pool, bt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(g_ref.astype(jnp.float32)),
+                                  np.asarray(g_pal.astype(jnp.float32)))
+    # scatter crossing a page boundary
+    new = jnp.asarray(rng.randint(-100, 100, size=(2, 5, 2, 6))).astype(dtype)
+    pos = jnp.asarray(np.array([2, 7], np.int32))
+    s_ref = PG.paged_scatter_ref(pool, new, pos, bt)
+    s_pal = PG.paged_scatter_pallas(pool, new, pos, bt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(s_ref.astype(jnp.float32)),
+                                  np.asarray(s_pal.astype(jnp.float32)))
+
+
+def test_paged_scatter_out_of_table_rows_trash_bin_on_both_impls():
+    """Rows past the block table must drop to the scratch page on the
+    pallas path too — a bare clamped table read would overwrite the LAST
+    real page (the jnp twin's mode="fill" semantics are the contract)."""
+    pool = jnp.arange(4 * 4 * 2, dtype=jnp.float32).reshape(4, 4, 2)
+    bt = jnp.asarray(np.array([[1, 2]], np.int32))
+    new = jnp.full((1, 2, 2), -1.0)
+    pos = jnp.asarray([7], jnp.int32)  # row 7 -> block 1; row 8 -> OOB
+    a = PG.paged_scatter_ref(pool, new, pos, bt)
+    b = PG.paged_scatter_pallas(pool, new, pos, bt, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # row 7 writes page 2 offset 3 (in-table); the OOB row 8 must NOT have
+    # clamped onto page 2 offset 0 — it lands in scratch (page 0) instead
+    np.testing.assert_array_equal(np.asarray(a)[2, :3],
+                                  np.asarray(pool)[2, :3])
+    np.testing.assert_array_equal(np.asarray(a)[0, 0], [-1.0, -1.0])
+
+
+def test_paged_scatter_unallocated_blocks_hit_scratch():
+    """Writes through block-table entry 0 (unallocated) land in the scratch
+    page and leave every real page untouched."""
+    pool = jnp.zeros((4, 2, 3), jnp.float32)
+    bt = jnp.asarray(np.array([[0, 0]], np.int32))  # nothing allocated
+    new = jnp.ones((1, 1, 3), jnp.float32)
+    out = PG.paged_scatter_ref(pool, new, jnp.asarray([1], jnp.int32), bt)
+    assert not np.asarray(out)[1:].any()  # pages 1..3 untouched
+    assert np.asarray(out)[0].any()       # trash landed in scratch
+
+
+# ------------------------------------------------- host/jit boundary (PSA)
+
+
+def test_host_copy_snapshots_before_mutation():
+    """The PR-2 PSA as a regression: jnp.asarray may zero-copy-alias a numpy
+    buffer on CPU, so host state fed to a jit and then mutated must cross
+    through host_copy. host_copy's result must be immune to any later host
+    mutation (asserting the UNSAFE path aliases would pin jax internals;
+    the guarantee that matters is the safe path)."""
+    live = np.arange(8, dtype=np.int32)
+    snap = host_copy(live)
+    live[:] = -1  # serving loop keeps mutating its bookkeeping
+    np.testing.assert_array_equal(np.asarray(snap), np.arange(8))
+
+    # and through a (async-dispatched) jitted consumer
+    live2 = np.arange(4, dtype=np.int32)
+    fut = jax.jit(lambda x: x * 2)(host_copy(live2))
+    live2[:] = 0
+    np.testing.assert_array_equal(np.asarray(fut), np.arange(4) * 2)
+
+
+def test_rejected_run_leaves_no_active_run_marker(params):
+    """A can-never-fit submission must not mark a run as active: metrics()
+    would otherwise keep accruing elapsed time for a run that never
+    happened, decaying tokens_per_s forever."""
+    eng = ServeEngine(params, TINY, POLICY, n_slots=1, s_max=8, impl="jnp")
+    with pytest.raises(CapacityError):
+        eng.run(_requests((7,), max_new=4))  # 7 + 4 > 8
+    assert eng._run_t0 is None
+    assert eng.metrics()["tokens_per_s"] == 0.0
+
+
+# ------------------------------------------------------- first-token change
+
+
+def test_first_token_sampled_from_prefill_logits(params):
+    """ROADMAP open item closed: with max_new=1 the whole request is served
+    by prefill alone (zero decode steps), and the cache never holds a
+    duplicate prompt[-1] row — rows written == prompt length."""
+    eng = ServeEngine(params, TINY, POLICY, n_slots=1, s_max=32, impl="jnp",
+                      prefill="chunked", prefill_chunk=4)
+    out = eng.run(_requests((5,), max_new=1))
+    assert len(out[0]) == 1
+    m = eng.metrics()
+    assert m["decode_steps"] == 0
+    assert m["tokens_generated"] == 1
+    # a max_new=4 request costs 3 decode steps (first token was free)
+    eng2 = ServeEngine(params, TINY, POLICY, n_slots=1, s_max=32, impl="jnp",
+                       prefill="chunked", prefill_chunk=4)
+    eng2.run(_requests((5,), max_new=4))
+    assert eng2.metrics()["decode_steps"] == 3
