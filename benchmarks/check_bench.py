@@ -18,10 +18,14 @@ Checks, per benchmark:
 (arch, policy) byte-accounting row present, quantized policies never cost
 more HBM bytes/token than bf16 (and w4a8 <= w8a8), the serving engine's
 chunked prefill must (a) decode bit-identically to the token-by-token path
-and (b) cut jitted calls per admission by >= its declared factor, and the
+and (b) cut jitted calls per admission by >= its declared factor, the
 paged KV cache must decode bit-identically to the dense-slot backend on
 every precision row while admitting >= MIN_PAGED_CAPACITY_RATIO x the
-concurrent requests at 4-bit KV under an equal cache byte budget.
+concurrent requests at 4-bit KV under an equal cache byte budget, and the
+prefix-sharing cache must decode the shared-prefix workload bit-identically
+to a cold paged run while cutting jitted prefill calls >=
+MIN_PREFIX_CALL_REDUCTION x and fresh page draws >=
+MIN_PREFIX_PAGE_REDUCTION x at equal cache bytes.
 
 Absolute microseconds are intentionally NOT gated: CI runners vary too much.
 Exit code 0 = green, 1 = any check failed (report on stdout).
@@ -121,6 +125,36 @@ def check_lm_serving(out_dir: pathlib.Path) -> list[str]:
                 f"{lm_serving.MIN_PAGED_CAPACITY_RATIO}x at 4-bit KV "
                 f"({r['capacity_paged']} paged vs {r['capacity_slot']} slot "
                 f"concurrent requests at equal cache bytes)")
+
+    # 5. prefix cache: on the shared-prefix workload, every precision row
+    # must decode bit-identically to the cold paged run AND realize the
+    # sharing wins — fewer jitted prefill calls and fewer fresh page draws
+    # at equal cache bytes (a silent regression to always-miss would keep
+    # tokens_match green while both ratios collapse to 1x)
+    prefix = {r["policy"]: r for r in rows if r.get("kind") == "prefix_serving"}
+    missing_prefix = set(lm_serving.PAGED_POLICIES) - set(prefix)
+    if missing_prefix:
+        errors.append(
+            f"lm_serving: missing prefix_serving rows: {sorted(missing_prefix)}")
+    for pol, r in sorted(prefix.items()):
+        if not r.get("tokens_match"):
+            errors.append(
+                f"lm_serving/{r['name']}: shared-prefix decode produced "
+                f"different tokens than the cold paged run")
+        if r["call_reduction"] < lm_serving.MIN_PREFIX_CALL_REDUCTION:
+            errors.append(
+                f"lm_serving/{r['name']}: prefix prefill call reduction "
+                f"{r['call_reduction']}x < "
+                f"{lm_serving.MIN_PREFIX_CALL_REDUCTION}x "
+                f"({r['prefill_calls_prefix']} prefix vs "
+                f"{r['prefill_calls_cold']} cold jitted calls)")
+        if r["page_reduction"] < lm_serving.MIN_PREFIX_PAGE_REDUCTION:
+            errors.append(
+                f"lm_serving/{r['name']}: prefix page-draw reduction "
+                f"{r['page_reduction']}x < "
+                f"{lm_serving.MIN_PREFIX_PAGE_REDUCTION}x "
+                f"({r['pages_drawn_prefix']} prefix vs "
+                f"{r['pages_drawn_cold']} cold pages at equal cache bytes)")
     return errors
 
 

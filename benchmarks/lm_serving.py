@@ -17,10 +17,16 @@ tokens occupy), effective bytes-per-token by KV precision, measured
 throughput at each backend's admissible concurrency, and decoded-token
 bit-exactness paged vs slot.
 
+Part 4 (prefix cache): the prefix-sharing backend vs a cold paged run on a
+shared-template workload — prefill jitted-call reduction, fresh-page-draw
+reduction, hit rate, and decoded-token bit-exactness, per KV precision.
+
 Rows land in ``BENCH_lm_serving.json`` so ``check_bench.py`` gates the
 byte-accounting invariants, the prefill-speedup claim (stepwise >= 5x the
-chunked call count), paged bit-exactness, and the paged capacity win
-(>= MIN_PAGED_CAPACITY_RATIO at 4-bit KV).
+chunked call count), paged bit-exactness, the paged capacity win
+(>= MIN_PAGED_CAPACITY_RATIO at 4-bit KV), and the prefix-sharing wins
+(bit-exact; >= MIN_PREFIX_CALL_REDUCTION fewer prefill calls and
+>= MIN_PREFIX_PAGE_REDUCTION fewer page draws at equal cache bytes).
 """
 
 from __future__ import annotations
@@ -46,6 +52,16 @@ PAGED_PAGE_SIZE = 16
 PAGED_PROMPT_LEN = 16
 PAGED_MAX_NEW = 8
 MIN_PAGED_CAPACITY_RATIO = 1.5
+
+#: The prefix-reuse workload: one shared template + short unique suffixes
+#: (check_bench gates bit-exactness vs the cold paged run and both ratios).
+PREFIX_SHARED_LEN = 24
+PREFIX_UNIQ_LEN = 6
+PREFIX_REQUESTS = 6
+PREFIX_PAGE_SIZE = 8
+PREFIX_MAX_NEW = 6
+MIN_PREFIX_CALL_REDUCTION = 2.0
+MIN_PREFIX_PAGE_REDUCTION = 1.5
 
 
 def _weight_bytes(cfg, policy) -> float:
@@ -239,9 +255,9 @@ def run_paged_serving() -> list[dict]:
             "s_max": PAGED_S_MAX,
             "request_rows": need,
             "pages_per_request": pages_per_request,
-            "kv_bytes_budget": m_p["kv_bytes_total"],
-            "kv_bytes_per_token_paged": round(m_p["kv_bytes_per_token"], 3),
-            "kv_bytes_per_token_slot": round(m_s["kv_bytes_per_token"], 3),
+            "kv_bytes_budget": m_p["cache/kv_bytes_total"],
+            "kv_bytes_per_token_paged": round(m_p["cache/kv_bytes_per_token"], 3),
+            "kv_bytes_per_token_slot": round(m_s["cache/kv_bytes_per_token"], 3),
             "capacity_slot": capacity_slot,
             "capacity_paged": capacity_paged,
             "capacity_ratio": round(capacity_paged / max(capacity_slot, 1), 3),
@@ -259,17 +275,103 @@ def run_paged_serving() -> list[dict]:
     return rows
 
 
+def run_prefix_serving() -> list[dict]:
+    """Prefix-sharing cache vs a cold paged run at EQUAL cache bytes.
+
+    The workload is the prefix-heavy shape real serving traffic has: every
+    request re-submits the same ``PREFIX_SHARED_LEN``-token template (system
+    prompt / few-shot header) with a short unique suffix. The cold paged
+    backend re-prefills the template per request and draws fresh pages for
+    it; the prefix backend maps the already-resident pages (ref++) and only
+    prefills the suffix. Gated claims (check_bench ``prefix_serving``):
+    decoded tokens bit-exact vs the cold run, jitted prefill calls reduced
+    >= MIN_PREFIX_CALL_REDUCTION, fresh pages drawn reduced >=
+    MIN_PREFIX_PAGE_REDUCTION — same model, same pool bytes, per KV
+    precision."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
+    rng = np.random.RandomState(0)
+    shared = rng.randint(1, cfg.vocab, size=PREFIX_SHARED_LEN).astype(np.int32)
+    suffixes = [rng.randint(1, cfg.vocab, size=PREFIX_UNIQ_LEN).astype(np.int32)
+                for _ in range(PREFIX_REQUESTS)]
+    prompts = [np.concatenate([shared, s]).astype(np.int32) for s in suffixes]
+
+    def drive(policy, params, backend):
+        eng = ServeEngine(
+            params, cfg, policy, n_slots=2, s_max=PAGED_S_MAX,
+            impl="jnp", prefill="chunked", prefill_chunk=SERVE_CHUNK,
+            cache=backend, page_size=PREFIX_PAGE_SIZE)
+        t0 = time.perf_counter()
+        out = eng.run([Request(rid=i, prompt=p.copy(), max_new=PREFIX_MAX_NEW)
+                       for i, p in enumerate(prompts)])
+        return out, eng.metrics(), time.perf_counter() - t0
+
+    rows = []
+    for pol_name in PAGED_POLICIES:
+        policy = get_policy(pol_name)
+        params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+        out_c, m_c, dt_c = drive(policy, params, "paged")
+        out_p, m_p, dt_p = drive(policy, params, "prefix")
+        call_red = m_c["prefill_jit_calls"] / max(m_p["prefill_jit_calls"], 1)
+        page_red = m_c["cache/pages_drawn"] / max(m_p["cache/pages_drawn"], 1)
+        row = {
+            "name": f"lm_prefix_serving_{pol_name}",
+            "kind": "prefix_serving",
+            "arch": cfg.name,
+            "policy": pol_name,
+            "kv_bits": policy.kv_cache_bits or 16,
+            "page_size": PREFIX_PAGE_SIZE,
+            "shared_len": PREFIX_SHARED_LEN,
+            "uniq_len": PREFIX_UNIQ_LEN,
+            "n_requests": PREFIX_REQUESTS,
+            "kv_bytes_budget": m_p["cache/kv_bytes_total"],
+            "prefill_calls_cold": m_c["prefill_jit_calls"],
+            "prefill_calls_prefix": m_p["prefill_jit_calls"],
+            "call_reduction": round(call_red, 3),
+            "pages_drawn_cold": m_c["cache/pages_drawn"],
+            "pages_drawn_prefix": m_p["cache/pages_drawn"],
+            "page_reduction": round(page_red, 3),
+            "prefix_hit_rate": round(m_p["cache/prefix_hit_rate"], 3),
+            "cow_copies": m_p["cache/cow_copies"],
+            "ttft_avg_cold_s": round(m_c["ttft_avg_s"], 4),
+            "ttft_avg_prefix_s": round(m_p["ttft_avg_s"], 4),
+            "wall_s_cold": round(dt_c, 4),
+            "wall_s_prefix": round(dt_p, 4),
+            "tokens_match": out_c == out_p,
+        }
+        rows.append(row)
+        csv_row(f"lm_prefix_serving_{pol_name}", dt_p * 1e6,
+                f"calls={row['prefill_calls_prefix']}v"
+                f"{row['prefill_calls_cold']};"
+                f"pages={row['pages_drawn_prefix']}v{row['pages_drawn_cold']};"
+                f"hit_rate={row['prefix_hit_rate']};"
+                f"tokens_match={row['tokens_match']}")
+    return rows
+
+
 def run_kvpage_tune() -> list[dict]:
-    """Autotune the paged cache's page size like a kernel tile.
+    """Autotune the paged cache's page size like a kernel tile — one winner
+    per (kv_cache_bits, s_max) cell, not one global default.
 
     Each candidate ``ps`` builds a paged engine at the benchmark shape and
     times a short decode burst end-to-end (gather/scatter grid cost vs
     page-tail waste is a wall-clock trade-off, so the whole step is the
-    kernel being tuned). The winner lands in ``benchmarks/tuned/
-    tiles_kvpage.json`` keyed on (kv precision, s_max) and becomes the
-    default ``PagedKVCache`` page size for that cell; under
-    ``REPRO_TUNE_FROZEN`` the cached winner (or static default) is reported
-    without searching, like every other tuned op."""
+    kernel being tuned). The kv precision changes the page's byte footprint
+    — packed int4 rows make small pages cheap to move while bf16 rows favor
+    fewer, larger transfers — so every ``PAGED_POLICIES`` precision is tuned
+    separately. Winners land in ``benchmarks/tuned/tiles_kvpage.json`` keyed
+    ``(kv-bits perm, s_max)`` and become the default page size any
+    ``PagedKVCache``/``PrefixCache`` constructed at that cell resolves
+    (serve/cache.py); under ``REPRO_TUNE_FROZEN`` the cached winner (or
+    static default) is reported without searching, like every other tuned
+    op."""
     import jax
     import numpy as np
 
@@ -278,53 +380,57 @@ def run_kvpage_tune() -> list[dict]:
     from repro.serve import Request, ServeEngine
 
     cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
-    policy = get_policy("w4a8kv4")
-    params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
     rng = np.random.RandomState(0)
     prompts = [rng.randint(1, cfg.vocab, size=PAGED_PROMPT_LEN).astype(np.int32)
                for _ in range(4)]
+    rows = []
+    for pol_name in PAGED_POLICIES:
+        policy = get_policy(pol_name)
+        params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
 
-    def make_call(tiles):
-        # ONE engine per candidate: the jits compile during time_call's
-        # warmup run and every timed iteration measures warm serving speed
-        # (a fresh engine per call would retrace + recompile each time and
-        # the winner would be compile-latency noise)
-        eng = ServeEngine(
-            params, cfg, policy, n_slots=2, s_max=PAGED_S_MAX,
-            impl="jnp", prefill="chunked", prefill_chunk=SERVE_CHUNK,
-            cache="paged", page_size=int(tiles["ps"]))
+        def make_call(tiles, policy=policy, params=params):
+            # ONE engine per candidate: the jits compile during time_call's
+            # warmup run and every timed iteration measures warm serving
+            # speed (a fresh engine per call would retrace + recompile each
+            # time and the winner would be compile-latency noise)
+            eng = ServeEngine(
+                params, cfg, policy, n_slots=2, s_max=PAGED_S_MAX,
+                impl="jnp", prefill="chunked", prefill_chunk=SERVE_CHUNK,
+                cache="paged", page_size=int(tiles["ps"]))
 
-        def call():
-            return eng.run([Request(rid=i, prompt=p.copy(),
-                                    max_new=PAGED_MAX_NEW)
-                            for i, p in enumerate(prompts)])
-        return call
+            def call():
+                return eng.run([Request(rid=i, prompt=p.copy(),
+                                        max_new=PAGED_MAX_NEW)
+                                for i, p in enumerate(prompts)])
+            return call
 
-    perm = tuning.perm_key(x_bits=policy.kv_cache_bits)
-    shape = tuning.shape_key(PAGED_S_MAX)
-    entry = tuning.autotune(
-        "kvpage", perm=perm, shape=shape, make_call=make_call,
-        cand=tuning.candidates("kvpage", M=PAGED_S_MAX), iters=2, warmup=1)
-    row = {
-        "name": "lm_kvpage_tune",
-        "kind": "kvpage_tune",
-        "arch": cfg.name,
-        "policy": policy.name,
-        "perm": perm,
-        "shape": shape,
-        "ps": int(entry["ps"]),
-        "us": entry.get("us"),
-        "source": entry.get("source", "autotune"),
-    }
-    csv_row("lm_kvpage_tune", entry.get("us") or 0.0,
-            f"ps={row['ps']};perm={perm};shape={shape}")
-    return [row]
+        perm = tuning.perm_key(x_bits=policy.kv_cache_bits)
+        shape = tuning.shape_key(PAGED_S_MAX)
+        entry = tuning.autotune(
+            "kvpage", perm=perm, shape=shape, make_call=make_call,
+            cand=tuning.candidates("kvpage", M=PAGED_S_MAX), iters=2, warmup=1)
+        row = {
+            "name": f"lm_kvpage_tune_{pol_name}",
+            "kind": "kvpage_tune",
+            "arch": cfg.name,
+            "policy": policy.name,
+            "perm": perm,
+            "shape": shape,
+            "ps": int(entry["ps"]),
+            "us": entry.get("us"),
+            "source": entry.get("source", "autotune"),
+        }
+        rows.append(row)
+        csv_row(f"lm_kvpage_tune_{pol_name}", entry.get("us") or 0.0,
+                f"ps={row['ps']};perm={perm};shape={shape}")
+    return rows
 
 
 def run():
     rows = run_decode_bytes()
     rows += run_serve_prefill()
     rows += run_paged_serving()
+    rows += run_prefix_serving()
     rows += run_kvpage_tune()
     emit_json("lm_serving", rows)
 

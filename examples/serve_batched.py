@@ -4,6 +4,9 @@ batched/chunked prefill, and a pluggable admission scheduler.
 
 Run: PYTHONPATH=src python examples/serve_batched.py --requests 6
 CI smoke: PYTHONPATH=src python examples/serve_batched.py --requests 4 --impl jnp
+Prefix demo: PYTHONPATH=src python examples/serve_batched.py --requests 6 \
+    --cache prefix --shared-prefix 24  (every request reuses the same
+    system-prompt pages; watch cache/prefix_hit_rate and pages_drawn)
 """
 
 import argparse
@@ -32,12 +35,19 @@ def main():
     ap.add_argument("--chunk", type=int, default=16,
                     help="chunked-prefill chunk size (jitted calls per "
                          "admission = ceil(prompt_len / chunk))")
-    ap.add_argument("--cache", default="slot", choices=("slot", "paged"),
-                    help="KV cache backend: dense per-slot stripes or the "
-                         "paged page pool + block tables")
+    ap.add_argument("--cache", default="slot",
+                    choices=("slot", "paged", "prefix"),
+                    help="KV cache backend: dense per-slot stripes, the "
+                         "paged page pool + block tables, or paged with "
+                         "radix-indexed copy-on-write prefix sharing")
     ap.add_argument("--page-size", type=int, default=None,
-                    help="tokens per page (paged backend; default: tuned "
+                    help="tokens per page (paged backends; default: tuned "
                          "winner or the kvpage static default)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="prepend the same N-token system prompt to every "
+                         "request (exercises prefix reuse: with "
+                         "--cache prefix, later admissions map the shared "
+                         "pages instead of re-prefilling them)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -52,8 +62,12 @@ def main():
                       prefill=args.prefill, prefill_chunk=args.chunk,
                       cache=args.cache, page_size=args.page_size)
     rng = np.random.RandomState(0)
+    system = rng.randint(1, cfg.vocab, size=args.shared_prefix).astype(np.int32)
     reqs = [Request(rid=i,
-                    prompt=rng.randint(1, cfg.vocab, size=rng.randint(2, 6)).astype(np.int32),
+                    prompt=np.concatenate(
+                        [system,
+                         rng.randint(1, cfg.vocab,
+                                     size=rng.randint(2, 6))]).astype(np.int32),
                     max_new=args.max_new)
             for i in range(args.requests)]
     out = eng.run(reqs, on_token=lambda rid, t: None)
@@ -65,11 +79,18 @@ def main():
           f"decode_steps={m['decode_steps']} tokens/s={m['tokens_per_s']:.1f} "
           f"ttft_avg={m['ttft_avg_s']*1e3:.1f}ms slot_resets={m['slot_resets']} "
           f"stragglers={m['stragglers']}")
-    if m["cache_backend"] == "paged":
-        print(f"paged cache: page_size={m['page_size']} "
-              f"pages={m['pages_free']}/{m['pages_total']} free "
-              f"util={m['page_utilization']:.2f} "
-              f"bytes/token={m['kv_bytes_per_token']:.1f}")
+    if m["cache/backend"] in ("paged", "prefix"):
+        print(f"{m['cache/backend']} cache: page_size={m['cache/page_size']} "
+              f"pages={m['cache/pages_free']}/{m['cache/pages_total']} free "
+              f"drawn={m['cache/pages_drawn']} "
+              f"util={m['cache/page_utilization']:.2f} "
+              f"bytes/token={m['cache/kv_bytes_per_token']:.1f}")
+    if m["cache/backend"] == "prefix":
+        print(f"prefix sharing: hit_rate={m['cache/prefix_hit_rate']:.2f} "
+              f"({m['cache/prefix_hits']} hits/{m['cache/prefix_misses']} "
+              f"misses) cow_copies={m['cache/cow_copies']} "
+              f"index_pages={m['cache/index_pages']} "
+              f"evictions={m['cache/evictions']}")
 
 
 if __name__ == "__main__":

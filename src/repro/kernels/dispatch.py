@@ -177,7 +177,7 @@ def validate_coverage() -> None:
             if b not in have_w:
                 missing.append(f"wdqmm[w={b}]@{impl}")
         # the paged KV movers are storage-dtype-agnostic: one cell per backend
-        for op in ("paged_gather", "paged_scatter"):
+        for op in ("paged_gather", "paged_scatter", "paged_copy"):
             if not coverage(op, impl):
                 missing.append(f"{op}@{impl}")
     if missing:
@@ -282,6 +282,8 @@ def _register_library() -> None:
     # so a single cell per backend; the tunable knob is the page size itself,
     # resolved through tuning op "kvpage" by the PagePool.
     from repro.kernels.paged_gather import (
+        paged_copy_pallas,
+        paged_copy_ref,
         paged_gather_pallas,
         paged_gather_ref,
         paged_scatter_pallas,
@@ -296,6 +298,11 @@ def _register_library() -> None:
              name="paged_scatter")
     register("paged_scatter", impl="jnp", fn=paged_scatter_ref,
              name="paged_scatter_ref")
+    # the prefix cache's copy-on-write page clone (serve/prefix.py)
+    register("paged_copy", impl="pallas", fn=paged_copy_pallas,
+             name="paged_copy")
+    register("paged_copy", impl="jnp", fn=paged_copy_ref,
+             name="paged_copy_ref")
 
 
 _register_library()

@@ -219,6 +219,21 @@ def paged_scatter(
     return entry.fn(pool, new, pos, block_table, interpret=_interpret())
 
 
+def paged_copy(
+    pool: jax.Array,  # (n_pages, page_size, ...)
+    src: jax.Array,  # (K,) int32 source page ids
+    dst: jax.Array,  # (K,) int32 destination page ids
+    *,
+    impl: Impl = "auto",
+) -> jax.Array:
+    """Clone whole pages inside the pool (``dst[i] = src[i]``) — the prefix
+    cache's copy-on-write primitive (serve/prefix.py)."""
+    entry = dispatch.lookup("paged_copy", impl=impl)
+    if entry.key.impl == "jnp":
+        return entry.fn(pool, src, dst)
+    return entry.fn(pool, src, dst, interpret=_interpret())
+
+
 # ------------------------------------------------------- quantize-and-pack IO
 
 

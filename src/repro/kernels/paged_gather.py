@@ -12,7 +12,12 @@ between the pool and the contiguous logical view the attention math consumes:
     footprint win carries straight through to HBM traffic),
   * ``paged_scatter`` — write one new token row per sequence into the pool
     at ``block_table[b, pos // page_size], pos % page_size`` (the decode
-    write path; the pool is aliased in/out so untouched pages persist).
+    write path; the pool is aliased in/out so untouched pages persist),
+  * ``paged_copy``    — duplicate whole pages inside the pool (``dst[i] =
+    src[i]`` page-for-page, aliased in/out). This is the prefix cache's
+    copy-on-write primitive: a request that diverges mid-page clones the
+    shared page before writing, so the original stays bit-frozen for its
+    other readers (serve/prefix.py).
 
 Both ship the usual pair of backends: the Pallas kernel (interpret=True
 off-TPU) and a bit-exact jnp twin (plain XLA gather/scatter). Registered in
@@ -131,6 +136,54 @@ def paged_scatter_pallas(pool: jax.Array, new: jax.Array, pos: jax.Array,
         name="paged_scatter",
     )(block_table, jnp.asarray(pos, jnp.int32), new2, pool2)
     return out.reshape(pool.shape)
+
+
+def paged_copy_pallas(pool: jax.Array, src: jax.Array, dst: jax.Array, *,
+                      interpret: bool = True) -> jax.Array:
+    """Copy pool pages ``src`` -> ``dst`` ((K,) int32 each): one grid step
+    DMAs one whole page, the destination scalar-prefetched like the
+    scatter's table. The source pages are MATERIALIZED up front (gathered
+    before the aliased in-place write), so a ``dst`` page that reappears as
+    a later ``src`` reads the ORIGINAL bits — the same snapshot semantics
+    as the jnp twin. Duplicate ``dst`` entries are outside the contract
+    (every caller clones into distinct freshly drawn pages)."""
+    pool2, tail = _flatten_tail(pool, 2)
+    P_, ps, F = pool2.shape
+    (K,) = src.shape
+    srcs = jnp.take(pool2, jnp.asarray(src, jnp.int32), axis=0)  # (K, ps, F)
+
+    def kernel(dst_ref, srcs_ref, pool_ref, out_ref):
+        del dst_ref, pool_ref  # routing handled by the index maps
+        out_ref[0] = srcs_ref[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((1, ps, F), lambda k, d: (k, 0, 0)),
+            # the aliased pool rides along untouched (dummy block)
+            pl.BlockSpec((1, ps, F), lambda k, d: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ps, F), lambda k, d: (d[k], 0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((P_, ps, F), pool.dtype),
+        # operand 2 == pool2 (after the scalar-prefetch arg and srcs)
+        input_output_aliases={2: 0},
+        interpret=interpret,
+        name="paged_copy",
+    )(jnp.asarray(dst, jnp.int32), srcs, pool2)
+    return out.reshape(pool.shape)
+
+
+def paged_copy_ref(pool: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """jnp twin: advanced-index page copy. ``pool[src]`` is materialized
+    before the set, so src/dst overlap reads the ORIGINAL pages; duplicate
+    ``dst`` entries are outside the contract (order unspecified)."""
+    return pool.at[jnp.asarray(dst, jnp.int32)].set(
+        pool[jnp.asarray(src, jnp.int32)])
 
 
 def paged_scatter_ref(pool: jax.Array, new: jax.Array, pos: jax.Array,

@@ -30,7 +30,8 @@ def main():
     ap.add_argument("--prefill", default="auto",
                     choices=("auto", "chunked", "stepwise"))
     ap.add_argument("--prefill-chunk", type=int, default=16)
-    ap.add_argument("--cache", default="slot", choices=("slot", "paged"))
+    ap.add_argument("--cache", default="slot",
+                    choices=("slot", "paged", "prefix"))
     ap.add_argument("--page-size", type=int, default=None)
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()

@@ -4,6 +4,9 @@ Layering (each module owns one concern; the engine only composes):
 
   * :mod:`repro.serve.cache`     — KV cache managers: dense slot stripes
     (``SlotCache``) or the paged page pool + block tables (``PagedKVCache``),
+  * :mod:`repro.serve.prefix`    — prefix-sharing paged backend
+    (``PrefixCache``): radix index over token pages, refcounted
+    copy-on-write page reuse across requests,
   * :mod:`repro.serve.scheduler` — pluggable admission policy
     (fcfs / spf / bestfit), page-budget aware,
   * :mod:`repro.serve.prefill`   — chunked/batched vs token-by-token prompt
@@ -23,6 +26,7 @@ from repro.serve.cache import (
 )
 from repro.serve.engine import KernelStatsAccumulator, Request, ServeEngine, StepMonitor
 from repro.serve.prefill import ChunkedPrefill, StepwisePrefill, make_prefiller
+from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import (
     SCHEDULERS,
     BestFitScheduler,
@@ -33,7 +37,7 @@ from repro.serve.scheduler import (
 )
 
 __all__ = [
-    "CACHE_BACKENDS", "CapacityError", "PagedKVCache", "SlotCache",
+    "CACHE_BACKENDS", "CapacityError", "PagedKVCache", "PrefixCache", "SlotCache",
     "host_copy", "make_cache",
     "KernelStatsAccumulator", "Request", "ServeEngine", "StepMonitor",
     "ChunkedPrefill", "StepwisePrefill", "make_prefiller",

@@ -23,10 +23,24 @@ worst-case page count (prompt + max_new, rounded up) against the pool, and
 :meth:`prepare` draws physical pages on demand as the write frontier crosses
 page boundaries. Reservation keeps the no-mid-decode-eviction guarantee
 (an admitted request can always finish); on-demand drawing keeps the
-block-table honest about what is actually resident. Recycling is page-level
-and explicit: :meth:`reset_slot` zeroes the slot's pages (the "no stale
-K/V survives a recycle" guarantee, same as the dense backend) and returns
-every one of them to the free list.
+block-table honest about what is actually resident.
+
+Pages are REF-COUNTED: every reader of a page (a slot's block table, or the
+prefix-sharing index in serve/prefix.py) holds one reference, and recycling
+is deferred to ref==0 — :meth:`reset_slot` releases the slot's references
+and only the pages whose LAST reader just left are zeroed (the "no stale
+K/V survives a recycle" guarantee, same as the dense backend) and returned
+to the free list. On this base backend every page has exactly one reader,
+so release behaves like the pre-refcount immediate recycle; the prefix
+backend (``serve/prefix.py``, ``cache="prefix"``) maps one physical page
+into many block tables and relies on the deferral: completing one of two
+requests sharing a prefix must never zero pages the other still reads.
+
+The admission surface is prompt-aware: :meth:`can_admit`,
+:meth:`admission_cost` and :meth:`acquire` accept the request's prompt
+tokens so a sharing backend can charge only the UNMATCHED pages (this base
+backend ignores the prompt), and :meth:`commit` publishes a freshly
+prefilled prompt to the sharing index (a no-op here).
 """
 
 from __future__ import annotations
@@ -109,11 +123,18 @@ class SlotCache:
         clamp/corrupt; this makes the ``s_max`` bound a hard guarantee.)"""
         _check_s_max(need, self.s_max)
 
-    def can_admit(self, need: int) -> bool:
-        """Would :meth:`acquire` succeed right now for ``need`` tokens?"""
+    def can_admit(self, need: int, prompt=None) -> bool:
+        """Would :meth:`acquire` succeed right now for ``need`` tokens?
+        ``prompt`` is the sharing-backend hook (ignored here)."""
         return need <= self.s_max and not all(self._busy)
 
-    def acquire(self, need: int) -> Optional[int]:
+    def admission_cost(self, need: int, prompt=None) -> int:
+        """What admitting this request costs in this backend's capacity
+        units (cache rows here; pages on the paged backends). The packing
+        scheduler ranks waiting requests by this."""
+        return need
+
+    def acquire(self, need: int, prompt=None) -> Optional[int]:
         """Claim the lowest free slot for ``need`` new tokens, recycling it
         first whenever the previous occupant left a nonzero position —
         request isolation: starting a new request mid-context would let the
@@ -147,6 +168,12 @@ class SlotCache:
     def advance(self, slot: int, n: int) -> None:
         self.pos[slot] += n
 
+    def commit(self, slot: int, prompt) -> None:
+        """Publish a freshly prefilled prompt to the prefix-sharing index so
+        later requests can reuse its pages. A no-op on non-sharing backends;
+        the call is part of the manager contract the engine honors after
+        every prefill (see serve/prefix.py)."""
+
     def reset_slot(self, slot: int) -> None:
         """Explicit recycle: zero the slot's cache rows and rewind its write
         position. Guarantees no stale K/V survives a recycle regardless of
@@ -158,9 +185,12 @@ class SlotCache:
     # --- observability ------------------------------------------------------
 
     def stats(self) -> dict:
+        """Backend health snapshot. Keys are UNNAMESPACED here; the engine's
+        ``metrics()`` mounts every entry under ``cache/`` so backend stats
+        can never collide with engine counters."""
         total = _tree_bytes(self.caches)
         return {
-            "cache_backend": "slot",
+            "backend": "slot",
             "kv_bytes_total": total,
             "kv_bytes_per_token": total / (self.n_slots * self.s_max),
         }
@@ -212,8 +242,11 @@ class PagedKVCache:
         self.pos = np.zeros(n_slots, np.int32)
         self.resets = 0
         self._busy = [False] * n_slots
-        self._alloc = np.zeros(n_slots, np.int32)     # blocks drawn per slot
-        self._reserved = np.zeros(n_slots, np.int32)  # pages promised per slot
+        self._alloc = np.zeros(n_slots, np.int32)     # blocks mapped per slot
+        self._shared = np.zeros(n_slots, np.int32)    # of those, shared pages
+        self._reserved = np.zeros(n_slots, np.int32)  # NEW pages promised/slot
+        self._ref = np.zeros(n_pages, np.int32)       # readers per page
+        self.pages_drawn = 0  # cumulative fresh-page draws (sharing shrinks it)
         # page 0 is the scratch page; low ids are handed out first
         self._free: list[int] = list(range(n_pages - 1, 0, -1))
 
@@ -230,15 +263,70 @@ class PagedKVCache:
         return len(self._free)
 
     def pages_allocated(self) -> int:
+        """Block-table entries mapped across slots — the per-slot LOGICAL
+        view (a page shared by k slots counts k times; see
+        :meth:`pages_live` for distinct physical residency)."""
         return int(self._alloc.sum())
+
+    def pages_live(self) -> int:
+        """Distinct physical pages with at least one reader (the free-list
+        complement: free + live + scratch == n_pages, the pool conservation
+        invariant tests/test_prefix.py churns)."""
+        return self.n_pages - 1 - len(self._free)
 
     def pages_available(self) -> int:
         """Free pages not already promised to admitted requests. Admission
         checks against THIS, so every admitted request can always draw its
-        reserved pages — no mid-decode exhaustion, ever."""
-        committed = sum(int(self._reserved[s] - self._alloc[s])
-                        for s in range(self.n_slots) if self._busy[s])
+        reserved pages — no mid-decode exhaustion, ever. Shared (premapped)
+        pages never hit the free list, so a slot's outstanding draw debt is
+        its reservation minus the pages it has drawn fresh."""
+        committed = sum(
+            int(self._reserved[s] - (self._alloc[s] - self._shared[s]))
+            for s in range(self.n_slots) if self._busy[s])
         return len(self._free) - committed
+
+    def _draw_page(self) -> int:
+        """Pop one zeroed page off the free list and give it its first
+        reference. Callers guarantee availability (reservation discipline)."""
+        if not self._free:
+            raise RuntimeError(
+                "page pool exhausted despite admission reservation — "
+                "cache manager accounting bug")
+        page = self._free.pop()
+        self._ref[page] = 1
+        self.pages_drawn += 1
+        return page
+
+    def _retain_page(self, page: int) -> None:
+        """Add one reader to a live page (sharing backends map one physical
+        page into many block tables)."""
+        self._ref[page] += 1
+
+    def _release_pages(self, pages) -> None:
+        """Drop one reference per listed page; pages whose LAST reader left
+        are zeroed (no stale K/V outlives its readers) and returned to the
+        free list — the deferred ref==0 recycle shared pages rely on."""
+        dead: list[int] = []
+        for p in pages:
+            p = int(p)
+            if p == 0:
+                continue  # scratch is never refcounted
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                dead.append(p)
+            elif self._ref[p] < 0:
+                raise RuntimeError(
+                    f"page {p} released below zero references — "
+                    f"cache manager accounting bug")
+        # zero in fixed-length batches (padded with scratch) so one compiled
+        # program serves every release; fresh arrays per call — the buffer
+        # crosses the jit boundary, never reuse a mutated one (PSA)
+        for i in range(0, len(dead), self.n_blocks):
+            chunk = dead[i : i + self.n_blocks]
+            batch = np.zeros(self.n_blocks, np.int32)
+            batch[: len(chunk)] = chunk
+            self.caches = _zero_pages(self.caches, jnp.asarray(batch))
+        self._free.extend(dead)
 
     # --- occupancy ---------------------------------------------------------
 
@@ -256,19 +344,26 @@ class PagedKVCache:
                 f"max_new at page_size={self.page_size}) but the pool holds "
                 f"{self.pages_total()}")
 
-    def can_admit(self, need: int) -> bool:
+    def can_admit(self, need: int, prompt=None) -> bool:
         """Free slot AND enough unpromised pages for the worst case. False
         is a QUEUE signal (pages return as requests complete), never a
-        reject — :meth:`check_admissible` covers can-never-fit."""
+        reject — :meth:`check_admissible` covers can-never-fit. ``prompt``
+        lets the prefix backend charge only unmatched pages; ignored here."""
         return (not all(self._busy)
-                and self.pages_for(need) <= self.pages_available())
+                and self.admission_cost(need, prompt) <= self.pages_available())
 
-    def acquire(self, need: int) -> Optional[int]:
+    def admission_cost(self, need: int, prompt=None) -> int:
+        """NEW pages admitting this request would consume (the packing
+        scheduler's ranking unit). The whole worst case here; the prefix
+        backend subtracts the pages ``prompt`` already has resident."""
+        return self.pages_for(need)
+
+    def acquire(self, need: int, prompt=None) -> Optional[int]:
         """Claim the lowest free slot and reserve the request's worst-case
         page count against the pool. None when no slot is free or the pool
         cannot promise the pages right now (requeue and retry later)."""
         self.check_admissible(need)
-        if not self.can_admit(need):
+        if not self.can_admit(need, prompt):
             return None
         for s in range(self.n_slots):
             if self._busy[s]:
@@ -302,29 +397,28 @@ class PagedKVCache:
             raise CapacityError(
                 f"slot {slot}: write frontier {upto} exceeds s_max={self.s_max}")
         while int(self._alloc[slot]) * self.page_size < upto:
-            if not self._free:
-                raise RuntimeError(
-                    "page pool exhausted despite admission reservation — "
-                    "cache manager accounting bug")
-            page = self._free.pop()
-            self.block_tables[slot, int(self._alloc[slot])] = page
+            self.block_tables[slot, int(self._alloc[slot])] = self._draw_page()
             self._alloc[slot] += 1
 
     def advance(self, slot: int, n: int) -> None:
         self.pos[slot] += n
 
+    def commit(self, slot: int, prompt) -> None:
+        """Sharing-index publication hook (manager contract; the engine
+        calls it after every prefill). No index on this backend — no-op."""
+
     def reset_slot(self, slot: int) -> None:
-        """Explicit page-level recycle: zero the slot's pages (no stale K/V
-        outlives a recycle, same guarantee as the dense backend), return
-        every page to the free list, and clear the block-table row."""
+        """Explicit page-level recycle: drop the slot's reference on every
+        mapped page and clear the block-table row. Pages whose last reader
+        just left are zeroed and freed (``_release_pages``); pages other
+        readers still hold — shared prefixes on the prefix backend — stay
+        resident and bit-frozen."""
         n_alloc = int(self._alloc[slot])
         if n_alloc:
-            pages = np.zeros(self.n_blocks, np.int32)  # pad with scratch
-            pages[:n_alloc] = self.block_tables[slot, :n_alloc]
-            self.caches = _zero_pages(self.caches, jnp.asarray(pages))
-            self._free.extend(int(p) for p in pages[:n_alloc])
+            self._release_pages(self.block_tables[slot, :n_alloc])
         self.block_tables[slot, :] = 0
         self._alloc[slot] = 0
+        self._shared[slot] = 0
         self._reserved[slot] = 0
         self.pos[slot] = 0
         self.resets += 1
@@ -336,19 +430,22 @@ class PagedKVCache:
         (its complement is internal fragmentation — page-tail waste), and
         bytes-per-token is the pool's effective storage cost at the active
         ``kv_cache_bits`` (what makes 4-bit KV hold ~4x the tokens of bf16
-        in the same budget)."""
+        in the same budget). Unnamespaced; the engine mounts these under
+        ``cache/``."""
         total = _tree_bytes(self.caches)
         used_rows = sum(int(self.pos[s]) for s in range(self.n_slots)
                         if self._busy[s])
         resident_rows = self.pages_allocated() * self.page_size
         util = used_rows / resident_rows if resident_rows else 1.0
         return {
-            "cache_backend": "paged",
+            "backend": "paged",
             "page_size": self.page_size,
             "pages_total": self.pages_total(),
             "pages_free": self.pages_free(),
             "pages_allocated": self.pages_allocated(),
+            "pages_live": self.pages_live(),
             "pages_available": self.pages_available(),
+            "pages_drawn": self.pages_drawn,
             "page_utilization": util,
             "page_fragmentation": 1.0 - util,
             "kv_bytes_total": total,
@@ -359,6 +456,9 @@ class PagedKVCache:
 CACHE_BACKENDS: dict[str, type] = {
     "slot": SlotCache,
     "paged": PagedKVCache,
+    # "prefix" (serve/prefix.py) self-registers on import; the package
+    # __init__ imports it eagerly, and importing any repro.serve submodule
+    # runs the package __init__ first, so the name always resolves here.
 }
 
 

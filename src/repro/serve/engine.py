@@ -5,10 +5,11 @@ this module owns ONLY the decode loop and observability:
 
   * :mod:`repro.serve.cache`                 — cache rows/pages, per-slot
     write positions, recycling, capacity checks. Backend-selected:
-    ``cache="slot"`` (dense per-slot stripes) or ``cache="paged"`` (global
+    ``cache="slot"`` (dense per-slot stripes), ``cache="paged"`` (global
     page pool + block tables — admission becomes a free-PAGE budget, so
     concurrency at a fixed byte budget scales with prompt-length slack and
-    ``kv_cache_bits``);
+    ``kv_cache_bits``), or ``cache="prefix"`` (paged + radix-indexed
+    copy-on-write prefix sharing across requests, serve/prefix.py);
   * :class:`repro.serve.scheduler.Scheduler` — admission order (pluggable:
     ``fcfs`` / ``spf`` / ``bestfit`` / any Scheduler instance);
   * :mod:`repro.serve.prefill`               — how prompts enter the cache
@@ -220,20 +221,30 @@ class ServeEngine:
         admission runs between decode steps, while other slots decode).
 
         The scheduler picks under the cache's admission predicate — on the
-        paged backend that is the free-page budget, not just a free slot.
+        paged backend that is the free-page budget, not just a free slot —
+        and its admission-cost metric (the prefix backend charges only the
+        UNMATCHED pages, so the packing policy ranks by post-match need).
         The FIRST output token is sampled here, from the prefill's own
         last-token logits: the seed engine discarded them and re-fed
         ``prompt[-1]`` as a decode step, costing one extra step and one
         duplicate cache row per admission (ROADMAP open item, now closed).
         """
-        fits = lambda r: self.cache.can_admit(len(r.prompt) + r.max_new)  # noqa: E731
+        fits = lambda r: self.cache.can_admit(  # noqa: E731
+            len(r.prompt) + r.max_new, prompt=r.prompt)
+        cost = lambda r: self.cache.admission_cost(  # noqa: E731
+            len(r.prompt) + r.max_new, prompt=r.prompt)
         while self.scheduler.pending():
-            req = self.scheduler.next_request(fits)
-            slot = self.cache.acquire(len(req.prompt) + req.max_new)
+            req = self.scheduler.next_request(fits, cost)
+            slot = self.cache.acquire(len(req.prompt) + req.max_new,
+                                      prompt=req.prompt)
             if slot is None:  # no slot / page budget: requeue at the front
                 self.scheduler.requeue(req)
                 return
+            # prefix backend: acquire() mapped the matched prefix and set
+            # pos[slot] past it; the prefiller skips those tokens and the
+            # post-prefill commit publishes the new full pages to the index
             logits = self.prefiller.prefill(self.cache, slot, req.prompt)
+            self.cache.commit(slot, req.prompt)
             req.out = []
             self.slot_req[slot] = req
             self.slot_remaining[slot] = req.max_new
@@ -299,7 +310,9 @@ class ServeEngine:
             elapsed += time.perf_counter() - self._run_t0
         elapsed = max(elapsed, 1e-9)
         return {
-            **self.cache.stats(),
+            # backend stats mount under cache/ so slot/paged/prefix keys can
+            # never collide with (or shadow) the engine's own counters
+            **{f"cache/{k}": v for k, v in self.cache.stats().items()},
             "requests_completed": self._completed,
             "tokens_generated": self._tokens_out,
             "tokens_per_s": self._tokens_out / elapsed,

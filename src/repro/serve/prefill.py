@@ -20,6 +20,15 @@ Both strategies call ``cache.prepare(slot, n)`` before writing n rows — the
 paged backend draws physical pages on demand there — and RETURN the last
 real prompt token's logits, which the engine now samples the first output
 token from (no duplicate ``prompt[-1]`` decode step; see ServeEngine).
+
+Both also SKIP the already-cached prefix: the slot's write position at
+prefill time is the number of prompt tokens the cache manager has already
+made resident (always 0 on slot/paged; the prefix backend maps matched
+pages at acquire and advances ``pos`` past them — serve/prefix.py), so a
+prompt with a shared prefix costs O(S_new/chunk) jitted calls, not
+O(S/chunk). Bit-exactness is unaffected: a suffix chunk at offset ``pos``
+is numerically the same computation whether the earlier rows were written
+by this request or mapped from a shared page.
 """
 
 from __future__ import annotations
@@ -84,7 +93,10 @@ class ChunkedPrefill:
 
     def prefill(self, cache, slot: int, prompt: np.ndarray):
         """Write ``prompt`` into ``slot`` starting at its current position.
-        Returns the last real prompt token's logits (1, 1, V)."""
+        Returns the last real prompt token's logits (1, 1, V). Tokens the
+        cache already holds (``cache.pos[slot]`` > 0: a matched shared
+        prefix) are skipped — only the suffix is chunked through the jits."""
+        prompt = prompt[int(cache.pos[slot]):]
         S = len(prompt)
         logits = None
         off = 0
@@ -135,7 +147,7 @@ class StepwisePrefill:
 
     def prefill(self, cache, slot: int, prompt: np.ndarray):
         logits = None
-        for tok in prompt:
+        for tok in prompt[int(cache.pos[slot]):]:  # skip the matched prefix
             toks = np.zeros((self.n_slots, 1), np.int32)
             toks[slot, 0] = tok
             cache.prepare(slot, 1)

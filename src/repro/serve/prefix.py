@@ -1,0 +1,380 @@
+"""Prefix-sharing KV cache: radix-indexed copy-on-write page reuse.
+
+Serving traffic is prefix-heavy — shared system prompts, few-shot templates,
+multi-turn chat re-submissions — so most admitted tokens are re-prefills of
+pages the pool already holds. This backend (``ServeEngine(...,
+cache="prefix")``) makes those pages shareable:
+
+  * **Radix index.** A trie with one node per FULL page of prompt tokens,
+    children keyed by the page's token block (python tuples — equal content
+    is equal key, so "hash" collisions are impossible by construction). A
+    node pins one physical pool page holding the quantized K/V of exactly
+    those tokens at exactly those positions; because K/V rows are pure
+    per-token functions of the shared prefix (per-(token, head) quantization
+    scales, causal attention), one request's pages are bit-valid for every
+    request with the same prefix.
+  * **Zero-cost hits.** Admission walks the trie: every matched full page is
+    mapped straight into the new request's block table (ref++) WITHOUT being
+    prefilled — prefill then starts at the match frontier, so jitted prefill
+    calls drop from O(S/chunk) to O(S_new/chunk) and admission charges the
+    pool only the UNMATCHED pages.
+  * **Copy-on-write.** The first divergent/partial page is cloned through
+    the ``paged_copy`` kernel (kernels/paged_gather.py) into a fresh page
+    before the request writes into it; the shared original stays bit-frozen
+    for its other readers. A fully-matched prompt is capped at S-1 reused
+    tokens (the last prompt token always re-prefills, COW-cloned into a
+    private page) so the engine still gets last-token logits to sample the
+    first output token from.
+  * **Refcounted lifecycle.** Every reader of a page — each block table
+    mapping it, plus the trie itself — holds one reference
+    (serve/cache.py's ``_retain_page``/``_release_pages``). Completion
+    releases the slot's references; a page recycles (zero + free-list)
+    exactly when its LAST reader leaves. Trie residency keeps prefix pages
+    warm across requests; under pool pressure admission evicts cold index
+    LEAVES in LRU order (never a page a live block table still reads, and
+    never an interior node out from under its children).
+
+Admission keeps the paged backend's no-mid-decode-exhaustion guarantee:
+``acquire`` reserves the request's unmatched worst case and eagerly evicts
+until the whole reservation is drawable, so ``prepare`` can never stall on
+a page another request might need back.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import PrecisionPolicy
+from repro.kernels import ops
+from repro.models.model import ArchConfig
+from repro.serve.cache import CACHE_BACKENDS, PagedKVCache
+
+
+class _Node:
+    """One full page of prompt tokens in the radix index."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_used")
+
+    def __init__(self, key, page: int, parent: Optional["_Node"]):
+        self.key = key        # tuple of page_size token ids (None at root)
+        self.page = page      # physical pool page (-1 at root)
+        self.parent = parent
+        self.children: dict[tuple, "_Node"] = {}
+        self.last_used = 0
+
+
+class PrefixCache(PagedKVCache):
+    """Paged KV cache with cross-request prefix sharing (radix + COW)."""
+
+    def __init__(self, cfg: ArchConfig, policy: PrecisionPolicy,
+                 n_slots: int, s_max: int, *,
+                 page_size: Optional[int] = None,
+                 n_pages: Optional[int] = None):
+        super().__init__(cfg, policy, n_slots, s_max,
+                         page_size=page_size, n_pages=n_pages)
+        self._root = _Node(None, -1, None)
+        self._clock = 0
+        # sharing observability (stats() surfaces these)
+        self.hits = 0
+        self.misses = 0
+        self.tokens_matched = 0
+        self.tokens_submitted = 0
+        self.cow_copies = 0
+        self.evictions = 0
+        # the COW clone routes through ops.paged_copy -> the registered
+        # paged_copy cell (compiled Pallas on TPU, jnp twin elsewhere),
+        # dispatch-counted at trace time like every other op; leaves are
+        # (count, n_pages, page_size, ...) so the kernel vmaps over the
+        # layer-stack axis
+        self._copy_pages = jax.jit(_tree_copy, donate_argnums=0)
+        # Trie-walk memos: every admission round probes each waiting prompt
+        # from fits(), again from the scheduler's cost() ranking, and the
+        # winner once more in acquire() — and _evictable() walks the whole
+        # index per probe. Both walks are pure functions of the index
+        # structure and the page refcounts, so results are cached until
+        # ``_epoch`` (bumped on ANY index or refcount mutation) moves, and
+        # the tables are dropped wholesale past a small size cap so a
+        # mutation-free engine serving unique prompts cannot grow them
+        # without bound.
+        self._epoch = 0
+        self._memo_epoch = 0
+        self._probe_memo: dict[bytes, tuple] = {}
+        self._evictable_memo: dict[tuple, int] = {}
+
+    # --- radix index --------------------------------------------------------
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    # every mutation the memoized walks can observe bumps _epoch: trie
+    # inserts/evictions (structure) and page draws/retains/releases (refs)
+    def _draw_page(self) -> int:
+        self._epoch += 1
+        return super()._draw_page()
+
+    def _retain_page(self, page: int) -> None:
+        self._epoch += 1
+        super()._retain_page(page)
+
+    def _release_pages(self, pages) -> None:
+        self._epoch += 1
+        super()._release_pages(pages)
+
+    def _index_mutated(self) -> None:
+        """A node was inserted or evicted: cached walks are stale."""
+        self._epoch += 1
+
+    def _sync_memos(self) -> None:
+        """Drop stale (or oversized) walk memos before consulting them."""
+        if (self._memo_epoch != self._epoch
+                or len(self._probe_memo) + len(self._evictable_memo) > 256):
+            self._probe_memo.clear()
+            self._evictable_memo.clear()
+            self._memo_epoch = self._epoch
+
+    def _page_key(self, prompt, d: int) -> tuple:
+        ps = self.page_size
+        return tuple(int(t) for t in prompt[d * ps : (d + 1) * ps])
+
+    def _probe(self, prompt):
+        """Read-only trie walk. Returns ``(full, partial, m)``: the chain of
+        exactly-matched full-page nodes, plus the best partially-matching
+        child at the divergence point and its usable row count ``m``. Total
+        reusable tokens are capped at ``len(prompt) - 1`` so prefill always
+        recomputes at least the last prompt token (logits source).
+
+        Memoized per prompt until the next index/refcount mutation: one
+        admission round probes every waiting prompt from ``can_admit``,
+        again from the scheduler's ``cost`` ranking, and the winner from
+        ``acquire``, and the walk cannot change in between."""
+        self._sync_memos()
+        key = np.asarray(prompt).tobytes()
+        hit = self._probe_memo.get(key)
+        if hit is not None:
+            return hit
+        S = len(prompt)
+        ps = self.page_size
+        node, full, d = self._root, [], 0
+        while (d + 1) * ps <= S - 1:
+            child = node.children.get(self._page_key(prompt, d))
+            if child is None:
+                break
+            full.append(child)
+            node, d = child, d + 1
+        limit = min(ps, S - 1 - d * ps)
+        best, best_m = None, 0
+        if limit > 0 and node.children:
+            seg = [int(t) for t in prompt[d * ps : d * ps + ps]]
+            for child in node.children.values():
+                m = 0
+                for a, b in zip(child.key, seg):
+                    if a != b:
+                        break
+                    m += 1
+                m = min(m, limit)
+                if m > best_m:
+                    best, best_m = child, m
+        self._probe_memo[key] = (full, best, best_m)
+        return full, best, best_m
+
+    def _evictable(self, exclude) -> int:
+        """Pages LRU eviction could free right now, cascading leaf-first: a
+        node counts iff the index is its only reader (ref==1), it is not
+        pinned by the in-flight admission (``exclude``), and its whole
+        subtree counts too (children always evict before parents). Memoized
+        per exclude-set until the next index/refcount mutation — queued
+        sharers of one template all probe with the same pinned path."""
+        self._sync_memos()
+        memo_key = tuple(sorted(id(n) for n in exclude))
+        hit = self._evictable_memo.get(memo_key)
+        if hit is not None:
+            return hit
+
+        def walk(node):
+            total, all_ok = 0, True
+            for ch in node.children.values():
+                n, ok = walk(ch)
+                total += n
+                all_ok = all_ok and ok
+            ok = (all_ok and node is not self._root and node not in exclude
+                  and int(self._ref[node.page]) == 1)
+            return total + (1 if ok else 0), ok
+        count = walk(self._root)[0]
+        self._evictable_memo[memo_key] = count
+        return count
+
+    def _evict_one(self, exclude) -> bool:
+        """Unlink the least-recently-used evictable LEAF and release its
+        page (ref 1 -> 0: zeroed and freed). Returns False when nothing is
+        evictable — interior nodes and pages with live readers are never
+        touched."""
+        best = None
+
+        def walk(node):
+            nonlocal best
+            for ch in node.children.values():
+                walk(ch)
+            if (node is not self._root and not node.children
+                    and node not in exclude
+                    and int(self._ref[node.page]) == 1
+                    and (best is None or node.last_used < best.last_used)):
+                best = node
+
+        walk(self._root)
+        if best is None:
+            return False
+        del best.parent.children[best.key]
+        self._index_mutated()
+        self._release_pages([best.page])
+        self.evictions += 1
+        return True
+
+    # --- admission ----------------------------------------------------------
+
+    def admission_cost(self, need: int, prompt=None) -> int:
+        """NEW pages this request would consume: its worst case minus the
+        full pages the index already holds (the COW clone of a partial
+        match still costs a fresh page, so only full matches discount)."""
+        if prompt is None:
+            return self.pages_for(need)
+        full, _, _ = self._probe(prompt)
+        return self.pages_for(need) - len(full)
+
+    def can_admit(self, need: int, prompt=None) -> bool:
+        """Free slot AND the post-match page need is coverable by unpromised
+        free pages plus what LRU eviction could reclaim (excluding the pages
+        this very request would match — mapping them makes them unevictable)."""
+        if all(self._busy):
+            return False
+        full, part, m = (self._probe(prompt) if prompt is not None
+                         else ([], None, 0))
+        exclude = set(full)
+        if part is not None and m > 0:
+            exclude.add(part)
+        cost = self.pages_for(need) - len(full)
+        return cost <= self.pages_available() + self._evictable(exclude)
+
+    def acquire(self, need: int, prompt=None) -> Optional[int]:
+        """Claim a slot, map every matched full page (ref++) without
+        prefilling it, COW-clone the first divergent/partial page, and
+        reserve the unmatched remainder — evicting cold index leaves
+        eagerly until the whole reservation is drawable."""
+        self.check_admissible(need)
+        full, part, m = (self._probe(prompt) if prompt is not None
+                         else ([], None, 0))
+        exclude = set(full)
+        if part is not None and m > 0:
+            exclude.add(part)
+        cost = self.pages_for(need) - len(full)
+        if (all(self._busy)
+                or cost > self.pages_available() + self._evictable(exclude)):
+            return None
+        slot = next(s for s in range(self.n_slots) if not self._busy[s])
+        if self.pos[slot] != 0 or self._alloc[slot]:
+            self.reset_slot(slot)  # defensive; release() already recycles
+        self._busy[slot] = True
+        for d, node in enumerate(full):
+            self.block_tables[slot, d] = node.page
+            self._retain_page(node.page)
+            node.last_used = self._tick()
+        self._alloc[slot] = len(full)
+        self._shared[slot] = len(full)
+        self._reserved[slot] = cost
+        while self.pages_available() < 0:
+            if not self._evict_one(exclude):
+                raise RuntimeError(
+                    "LRU eviction shortfall despite admission check — "
+                    "prefix cache accounting bug")
+        matched = len(full) * self.page_size
+        if part is not None and m > 0:
+            dst = self._draw_page()
+            self.block_tables[slot, len(full)] = dst
+            self._alloc[slot] += 1
+            self.caches = self._copy_pages(
+                self.caches, jnp.asarray([part.page], jnp.int32),
+                jnp.asarray([dst], jnp.int32))
+            part.last_used = self._tick()
+            self.cow_copies += 1
+            matched += m
+        self.pos[slot] = matched
+        if prompt is not None:
+            self.tokens_submitted += len(prompt)
+            self.tokens_matched += matched
+            if matched:
+                self.hits += 1
+            else:
+                self.misses += 1
+        return slot
+
+    def commit(self, slot: int, prompt) -> None:
+        """Publish the slot's freshly prefilled FULL prompt pages to the
+        index (partial tail pages stay private — decode keeps writing into
+        them). Each newly inserted node retains its page on behalf of the
+        index, which is what keeps the prefix resident after the request
+        completes. Matched nodes just refresh their LRU stamp."""
+        node = self._root
+        for d in range(len(prompt) // self.page_size):
+            key = self._page_key(prompt, d)
+            child = node.children.get(key)
+            if child is None:
+                page = int(self.block_tables[slot, d])
+                if page == 0:
+                    break  # defensive: unallocated block (never expected)
+                child = _Node(key, page, node)
+                node.children[key] = child
+                self._retain_page(page)
+                self._index_mutated()
+            child.last_used = self._tick()
+            node = child
+
+    # --- observability ------------------------------------------------------
+
+    def pages_shared(self) -> int:
+        """Distinct physical pages mapped by two or more live block tables."""
+        mapped = [self.block_tables[s, : int(self._alloc[s])]
+                  for s in range(self.n_slots) if self._busy[s]]
+        if not mapped:
+            return 0
+        pages = np.concatenate(mapped)
+        pages = pages[pages != 0]
+        _, counts = np.unique(pages, return_counts=True)
+        return int((counts >= 2).sum())
+
+    def index_pages(self) -> int:
+        """Pages pinned by the radix index (one per trie node)."""
+        def walk(node):
+            return sum(walk(ch) for ch in node.children.values()) + (
+                0 if node is self._root else 1)
+        return walk(self._root)
+
+    def stats(self) -> dict:
+        sub = self.tokens_submitted
+        return {
+            **super().stats(),
+            "backend": "prefix",
+            "prefix_hit_rate": self.tokens_matched / sub if sub else 0.0,
+            "prefix_hits": self.hits,
+            "prefix_misses": self.misses,
+            "tokens_matched": self.tokens_matched,
+            "pages_shared": self.pages_shared(),
+            "index_pages": self.index_pages(),
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+        }
+
+
+def _tree_copy(caches, src, dst):
+    """Clone pool pages ``src`` -> ``dst`` on every cache leaf. Leaves are
+    (count, n_pages, page_size, ...); vmap lifts the registered single-pool
+    kernel (``ops.paged_copy``: compiled Pallas on TPU, jnp twin elsewhere)
+    over the stacked layer axis."""
+    return jax.tree.map(
+        lambda a: jax.vmap(lambda p: ops.paged_copy(p, src, dst))(a), caches)
+
+
+CACHE_BACKENDS["prefix"] = PrefixCache

@@ -8,9 +8,13 @@ multi-engine routing PRs extend.
 
 Since the paged-cache refactor, admission capacity is a PAGE budget, not a
 slot count: the engine passes ``next_request`` a ``fits`` predicate ("would
-the cache admit this request right now?") built from the free-page count.
-Policies may consult it (best-fit packs the pool) or ignore it (fcfs/spf
-preserve strict ordering; a non-fitting pick simply requeues and waits).
+the cache admit this request right now?") built from the free-page count,
+plus a ``cost`` metric (what admitting the request would charge that budget
+— on the prefix-sharing backend this is the POST-MATCH page need, so a long
+prompt whose prefix is already resident ranks as the small request it
+actually is). Policies may consult them (best-fit packs the pool by cost)
+or ignore them (fcfs/spf preserve strict ordering; a non-fitting pick
+simply requeues and waits).
 
 Three policies prove the interface:
   * ``fcfs``    — first-come-first-served, the pre-refactor behavior,
@@ -29,6 +33,10 @@ from typing import Callable, Optional, Sequence, Union
 #: fits(request) -> bool: "would the cache admit this request right now?"
 FitsFn = Callable[[object], bool]
 
+#: cost(request) -> int: admission cost in the cache's capacity units
+#: (rows on the slot backend, NEW pages on paged/prefix — post-match need).
+CostFn = Callable[[object], int]
+
 
 class Scheduler:
     """Base admission policy: a FIFO queue plus a ``pick`` override point."""
@@ -44,15 +52,18 @@ class Scheduler:
     def pending(self) -> int:
         return len(self._queue)
 
-    def pick(self, fits: Optional[FitsFn] = None) -> int:
+    def pick(self, fits: Optional[FitsFn] = None,
+             cost: Optional[CostFn] = None) -> int:
         """Index into the queue of the next request to admit. ``fits`` is
-        the engine's capacity predicate; ordering-strict policies ignore it."""
+        the engine's capacity predicate and ``cost`` its admission-cost
+        metric; ordering-strict policies ignore both."""
         raise NotImplementedError
 
-    def next_request(self, fits: Optional[FitsFn] = None):
+    def next_request(self, fits: Optional[FitsFn] = None,
+                     cost: Optional[CostFn] = None):
         if not self._queue:
             return None
-        return self._queue.pop(self.pick(fits))
+        return self._queue.pop(self.pick(fits, cost))
 
     def requeue(self, request) -> None:
         """Put a popped request back at the head (admission found no slot
@@ -65,7 +76,8 @@ class FCFSScheduler(Scheduler):
 
     name = "fcfs"
 
-    def pick(self, fits: Optional[FitsFn] = None) -> int:
+    def pick(self, fits: Optional[FitsFn] = None,
+             cost: Optional[CostFn] = None) -> int:
         return 0
 
 
@@ -74,18 +86,21 @@ class ShortestPromptFirstScheduler(Scheduler):
 
     name = "spf"
 
-    def pick(self, fits: Optional[FitsFn] = None) -> int:
+    def pick(self, fits: Optional[FitsFn] = None,
+             cost: Optional[CostFn] = None) -> int:
         return min(range(len(self._queue)),
                    key=lambda i: (len(self._queue[i].prompt), i))
 
 
 class BestFitScheduler(Scheduler):
-    """Admit the LARGEST waiting request the current page budget can hold
-    (classic best-fit packing; ties: arrival order). Requests too big for
-    the budget right now are skipped, not blocked on — they admit when
-    completions return their pages. Falls back to head-of-line when nothing
-    fits (the engine requeues the pick and waits) or when no ``fits``
-    predicate is supplied."""
+    """Admit the COSTLIEST waiting request the current page budget can hold
+    (classic best-fit packing; ties: arrival order). Cost is the cache's
+    admission metric — on the prefix backend the POST-MATCH page need, so a
+    mostly-shared long prompt packs like the small request it actually is.
+    Requests too big for the budget right now are skipped, not blocked on —
+    they admit when completions return their pages. Falls back to
+    head-of-line when nothing fits (the engine requeues the pick and waits)
+    or when no ``fits`` predicate is supplied."""
 
     name = "bestfit"
 
@@ -93,13 +108,15 @@ class BestFitScheduler(Scheduler):
     def _size(req) -> int:
         return len(req.prompt) + getattr(req, "max_new", 0)
 
-    def pick(self, fits: Optional[FitsFn] = None) -> int:
+    def pick(self, fits: Optional[FitsFn] = None,
+             cost: Optional[CostFn] = None) -> int:
         if fits is None:
             return 0
         fitting = [i for i, r in enumerate(self._queue) if fits(r)]
         if not fitting:
             return 0
-        return max(fitting, key=lambda i: (self._size(self._queue[i]), -i))
+        rank = cost if cost is not None else self._size
+        return max(fitting, key=lambda i: (rank(self._queue[i]), -i))
 
 
 SCHEDULERS: dict[str, type] = {

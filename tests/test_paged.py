@@ -119,9 +119,10 @@ def test_fragmentation_under_mixed_prompt_lengths(params):
     # has all three prompts resident (+1 first token each, max_new=1 means
     # completion at admission — rid 0 and 1 already released)
     m = eng.metrics()
-    assert m["cache_backend"] == "paged"
-    assert m["pages_allocated"] == 0 and m["pages_free"] == m["pages_total"]
-    assert 0.0 <= m3["page_fragmentation"] < 1.0
+    assert m["cache/backend"] == "paged"
+    assert (m["cache/pages_allocated"] == 0
+            and m["cache/pages_free"] == m["cache/pages_total"])
+    assert 0.0 <= m3["cache/page_fragmentation"] < 1.0
     # a half-written pool mid-run: utilization strictly accounts tails
     eng2 = ServeEngine(params, TINY, POLICY, n_slots=3, s_max=32, impl="jnp",
                        prefill="chunked", prefill_chunk=4,
