@@ -25,7 +25,12 @@ concurrent requests at 4-bit KV under an equal cache byte budget, and the
 prefix-sharing cache must decode the shared-prefix workload bit-identically
 to a cold paged run while cutting jitted prefill calls >=
 MIN_PREFIX_CALL_REDUCTION x and fresh page draws >=
-MIN_PREFIX_PAGE_REDUCTION x at equal cache bytes.
+MIN_PREFIX_PAGE_REDUCTION x at equal cache bytes. The request-lifecycle
+API (``sampling_serving`` rows, one per cache backend) must keep greedy
+decode bit-exact across the compat ``run()`` wrapper, the session API, and
+the dense-slot reference; seeded stochastic streams must reproduce
+run-to-run while distinct seeds diverge; and a mid-run cancellation must
+free >= 1 page with zero pages leaked after the drain.
 
 Absolute microseconds are intentionally NOT gated: CI runners vary too much.
 Exit code 0 = green, 1 = any check failed (report on stdout).
@@ -155,6 +160,41 @@ def check_lm_serving(out_dir: pathlib.Path) -> list[str]:
                 f"{lm_serving.MIN_PREFIX_PAGE_REDUCTION}x "
                 f"({r['pages_drawn_prefix']} prefix vs "
                 f"{r['pages_drawn_cold']} cold pages at equal cache bytes)")
+
+    # 6. request-lifecycle API: unified-sampler greedy bit-exactness, seeded
+    # reproducibility/divergence, and cancellation resource release — one
+    # row per cache backend (a regression in any one backend's lifecycle
+    # path must not hide behind the others staying green)
+    sampling = {r["backend"]: r for r in rows
+                if r.get("kind") == "sampling_serving"}
+    missing_sampling = set(lm_serving.SAMPLING_BACKENDS) - set(sampling)
+    if missing_sampling:
+        errors.append(
+            f"lm_serving: missing sampling_serving rows: "
+            f"{sorted(missing_sampling)}")
+    for backend, r in sorted(sampling.items()):
+        if not r.get("greedy_match"):
+            errors.append(
+                f"lm_serving/{r['name']}: greedy decode via the lifecycle "
+                f"API diverged from the run() wrapper or the dense-slot "
+                f"baseline tokens")
+        if not r.get("seeded_repro"):
+            errors.append(
+                f"lm_serving/{r['name']}: identically-seeded sampling runs "
+                f"produced different tokens (PRNG stream not reproducible)")
+        if not r.get("seeds_differ"):
+            errors.append(
+                f"lm_serving/{r['name']}: different seeds produced "
+                f"identical streams (per-slot PRNG independence broken)")
+        if backend != "slot":
+            if r.get("cancel_pages_freed", 0) < 1:
+                errors.append(
+                    f"lm_serving/{r['name']}: mid-run cancellation freed "
+                    f"{r.get('cancel_pages_freed')} pages (expected >= 1)")
+            if r.get("pages_leaked", 1) != 0:
+                errors.append(
+                    f"lm_serving/{r['name']}: {r.get('pages_leaked')} pages "
+                    f"still live after drain (cancellation leak)")
     return errors
 
 

@@ -21,12 +21,21 @@ Part 4 (prefix cache): the prefix-sharing backend vs a cold paged run on a
 shared-template workload — prefill jitted-call reduction, fresh-page-draw
 reduction, hit rate, and decoded-token bit-exactness, per KV precision.
 
+Part 5 (lifecycle/sampling): the request-lifecycle API v1 on every cache
+backend — greedy decode through the unified batched sampler must stay
+bit-exact vs the batch ``run()`` wrapper AND vs the dense-slot reference
+(the PR-4 token baselines), seeded stochastic streams must reproduce
+run-to-run, different seeds must diverge per slot, and a mid-run
+``cancel()`` must free >= 1 page on the paged backends and leak none after
+the drain.
+
 Rows land in ``BENCH_lm_serving.json`` so ``check_bench.py`` gates the
 byte-accounting invariants, the prefill-speedup claim (stepwise >= 5x the
 chunked call count), paged bit-exactness, the paged capacity win
-(>= MIN_PAGED_CAPACITY_RATIO at 4-bit KV), and the prefix-sharing wins
+(>= MIN_PAGED_CAPACITY_RATIO at 4-bit KV), the prefix-sharing wins
 (bit-exact; >= MIN_PREFIX_CALL_REDUCTION fewer prefill calls and
->= MIN_PREFIX_PAGE_REDUCTION fewer page draws at equal cache bytes).
+>= MIN_PREFIX_PAGE_REDUCTION fewer page draws at equal cache bytes), and
+the ``sampling_serving`` lifecycle claims above.
 """
 
 from __future__ import annotations
@@ -356,6 +365,127 @@ def run_prefix_serving() -> list[dict]:
     return rows
 
 
+#: Lifecycle/sampling comparison shape (one row per cache backend).
+SAMPLING_BACKENDS = ("slot", "paged", "prefix")
+SAMPLING_PROMPT_LEN = 12
+SAMPLING_REQUESTS = 4
+SAMPLING_MAX_NEW = 6
+SAMPLING_PAGE_SIZE = 4
+
+
+def run_sampling_serving() -> list[dict]:
+    """Request-lifecycle API v1 claims, measured per cache backend.
+
+    * greedy_match — the same request stream decoded three ways must agree
+      token for token: the batch-compat ``run()`` wrapper, the session API
+      (``submit`` with explicit greedy ``SamplingParams``), and the
+      dense-slot reference (``run()`` on ``cache="slot"``, i.e. the PR-4
+      baseline tokens). The unified sampler's temp=0 lane must BE the old
+      argmax on every backend.
+    * seeded_repro / seeds_differ — stochastic streams (temperature/top-k/
+      top-p with per-request seeds) are a pure function of (seed, counter):
+      a second identically-seeded run reproduces every stream bit-for-bit,
+      and two requests with the same prompt but different seeds diverge.
+    * cancel_pages_freed / pages_leaked (paged backends) — cancelling one
+      request mid-decode returns >= 1 page to the pool immediately, and
+      after the remaining requests drain, no page is live beyond the
+      prefix backend's warm index (zero on plain paged).
+    """
+    import jax
+    import numpy as np
+
+    from repro.models import model as M
+    from repro.serve import Request, SamplingParams, ServeEngine
+
+    cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
+    policy = get_policy("w4a8")
+    params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab,
+                           size=SAMPLING_PROMPT_LEN).astype(np.int32)
+               for _ in range(SAMPLING_REQUESTS)]
+
+    def engine(backend):
+        return ServeEngine(
+            params, cfg, policy, n_slots=2, s_max=PAGED_S_MAX, impl="jnp",
+            prefill="chunked", prefill_chunk=SERVE_CHUNK, cache=backend,
+            page_size=SAMPLING_PAGE_SIZE if backend != "slot" else None)
+
+    def greedy_run(backend):
+        return engine(backend).run(
+            [Request(rid=i, prompt=p.copy(), max_new=SAMPLING_MAX_NEW)
+             for i, p in enumerate(prompts)])
+
+    def greedy_api(backend):
+        eng = engine(backend)
+        hs = [eng.submit(p.copy(), SamplingParams(max_new=SAMPLING_MAX_NEW),
+                         rid=i) for i, p in enumerate(prompts)]
+        eng.drain()
+        return {h.rid: h.result() for h in hs}
+
+    def seeded(backend):
+        eng = engine(backend)
+        # two requests share prompts[0] with different seeds (divergence
+        # probe); the rest are seeded per rid (reproducibility probe)
+        sp = lambda s: SamplingParams(  # noqa: E731
+            temperature=0.8, top_k=16, top_p=0.95, seed=s,
+            max_new=SAMPLING_MAX_NEW)
+        hs = [eng.submit(prompts[0].copy(), sp(100), rid=0),
+              eng.submit(prompts[0].copy(), sp(200), rid=1)]
+        hs += [eng.submit(prompts[i].copy(), sp(300 + i), rid=i + 2)
+               for i in range(2, SAMPLING_REQUESTS)]
+        eng.drain()
+        return {h.rid: h.result() for h in hs}
+
+    def cancel_probe(backend):
+        """Cancel one request mid-decode; returns (pages freed by the
+        cancel, pages still live after the drain beyond the warm index)."""
+        eng = engine(backend)
+        hs = [eng.submit(p.copy(), SamplingParams(max_new=SAMPLING_MAX_NEW),
+                         rid=i) for i, p in enumerate(prompts)]
+        eng.step()
+        eng.step()  # both slots admitted, a couple of tokens in
+        live_before = eng.cache.pages_live()
+        hs[0].cancel()
+        freed = live_before - eng.cache.pages_live()
+        eng.drain()
+        index = (eng.cache.index_pages()
+                 if hasattr(eng.cache, "index_pages") else 0)
+        leaked = eng.cache.pages_live() - index
+        return freed, leaked
+
+    ref = greedy_run("slot")  # the dense-slot baseline tokens
+    rows = []
+    for backend in SAMPLING_BACKENDS:
+        out_run = greedy_run(backend)
+        out_api = greedy_api(backend)
+        s1, s2 = seeded(backend), seeded(backend)
+        row = {
+            "name": f"lm_sampling_serving_{backend}",
+            "kind": "sampling_serving",
+            "arch": cfg.name,
+            "policy": policy.name,
+            "backend": backend,
+            "n_requests": SAMPLING_REQUESTS,
+            "max_new": SAMPLING_MAX_NEW,
+            "greedy_match": out_run == out_api == ref,
+            "seeded_repro": s1 == s2,
+            "seeds_differ": s1[0] != s1[1],
+        }
+        if backend != "slot":
+            freed, leaked = cancel_probe(backend)
+            row["cancel_pages_freed"] = freed
+            row["pages_leaked"] = leaked
+        rows.append(row)
+        csv_row(f"lm_sampling_serving_{backend}", 0.0,
+                f"greedy_match={row['greedy_match']};"
+                f"seeded_repro={row['seeded_repro']};"
+                f"seeds_differ={row['seeds_differ']};"
+                f"cancel_pages_freed={row.get('cancel_pages_freed')};"
+                f"pages_leaked={row.get('pages_leaked')}")
+    return rows
+
+
 def run_kvpage_tune() -> list[dict]:
     """Autotune the paged cache's page size like a kernel tile — one winner
     per (kv_cache_bits, s_max) cell, not one global default.
@@ -431,6 +561,7 @@ def run():
     rows += run_serve_prefill()
     rows += run_paged_serving()
     rows += run_prefix_serving()
+    rows += run_sampling_serving()
     rows += run_kvpage_tune()
     emit_json("lm_serving", rows)
 

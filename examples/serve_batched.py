@@ -1,12 +1,20 @@
 """Batched serving example: continuous batching over the integer serving
 path (packed weights + quantized KV cache) with per-slot cache positions,
-batched/chunked prefill, and a pluggable admission scheduler.
+batched/chunked prefill, a pluggable admission scheduler, and the
+request-lifecycle API v1 (streaming sessions, per-request sampling,
+cancellation, priority admission).
 
 Run: PYTHONPATH=src python examples/serve_batched.py --requests 6
 CI smoke: PYTHONPATH=src python examples/serve_batched.py --requests 4 --impl jnp
 Prefix demo: PYTHONPATH=src python examples/serve_batched.py --requests 6 \
     --cache prefix --shared-prefix 24  (every request reuses the same
     system-prompt pages; watch cache/prefix_hit_rate and pages_drawn)
+Streaming demo: PYTHONPATH=src python examples/serve_batched.py --stream \
+    --cancel-after 3  (submit handles, stream tokens as they decode, cancel
+    one request mid-stream; watch the cancelled counter and freed pages)
+Sampling demo: PYTHONPATH=src python examples/serve_batched.py \
+    --temperature 0.8 --top-k 20 --top-p 0.95 --seed 7  (per-request seeds:
+    re-running with the same seed reproduces the streams bit-for-bit)
 """
 
 import argparse
@@ -17,7 +25,7 @@ import numpy as np
 from repro import configs
 from repro.core.policy import get_policy
 from repro.models import model as M
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine
 
 
 def main():
@@ -29,7 +37,7 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--impl", default="auto", choices=("auto", "pallas", "jnp"))
     ap.add_argument("--scheduler", default="fcfs",
-                    choices=("fcfs", "spf", "bestfit"))
+                    choices=("fcfs", "spf", "bestfit", "priority"))
     ap.add_argument("--prefill", default="auto",
                     choices=("auto", "chunked", "stepwise"))
     ap.add_argument("--chunk", type=int, default=16,
@@ -48,6 +56,20 @@ def main():
                          "request (exercises prefix reuse: with "
                          "--cache prefix, later admissions map the shared "
                          "pages instead of re-prefilling them)")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive via the lifecycle API: submit() handles, "
+                         "stream tokens per request as decode progresses "
+                         "(instead of the batch run() wrapper)")
+    ap.add_argument("--cancel-after", type=int, default=0, metavar="K",
+                    help="with --stream: cancel the middle request after "
+                         "its K-th streamed token (demonstrates mid-decode "
+                         "resource release; 0 = never)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (bit-identical to the pre-v1 engine)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed + i")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -63,22 +85,45 @@ def main():
                       cache=args.cache, page_size=args.page_size)
     rng = np.random.RandomState(0)
     system = rng.randint(1, cfg.vocab, size=args.shared_prefix).astype(np.int32)
-    reqs = [Request(rid=i,
-                    prompt=np.concatenate(
-                        [system,
-                         rng.randint(1, cfg.vocab,
-                                     size=rng.randint(2, 6))]).astype(np.int32),
-                    max_new=args.max_new)
-            for i in range(args.requests)]
-    out = eng.run(reqs, on_token=lambda rid, t: None)
-    for rid in sorted(out):
-        print(f"req {rid}: {out[rid]}")
+    prompts = [np.concatenate(
+        [system, rng.randint(1, cfg.vocab, size=rng.randint(2, 6))]
+    ).astype(np.int32) for _ in range(args.requests)]
+    sp = [SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                         top_p=args.top_p, seed=args.seed + i,
+                         max_new=args.max_new)
+          for i in range(args.requests)]
+
+    if args.stream:
+        # lifecycle API: one handle per request; higher rid = higher
+        # priority so the priority scheduler demo visibly reorders
+        handles = [eng.submit(p, sp[i], priority=i)
+                   for i, p in enumerate(prompts)]
+        victim = handles[len(handles) // 2]
+        for h in handles:
+            got = []
+            for tok in h.tokens():  # streaming: each next() steps the engine
+                got.append(tok)
+                if (args.cancel_after and h is victim
+                        and len(got) >= args.cancel_after):
+                    h.cancel()
+            print(f"req {h.rid}: {got} [{h.status}]")
+    else:
+        out = eng.run([Request(rid=i, prompt=prompts[i].copy(),
+                               params=sp[i]) for i in range(args.requests)])
+        for rid in sorted(out):
+            print(f"req {rid}: {out[rid]}")
+
     m = eng.metrics()
     print(f"metrics: prefill={m['prefill_mode']}(chunk={m['prefill_chunk']}, "
           f"{m['prefill_jit_calls']} jit calls) scheduler={m['scheduler']} "
           f"decode_steps={m['decode_steps']} tokens/s={m['tokens_per_s']:.1f} "
-          f"ttft_avg={m['ttft_avg_s']*1e3:.1f}ms slot_resets={m['slot_resets']} "
-          f"stragglers={m['stragglers']}")
+          f"ttft_avg={m['ttft_avg_s']*1e3:.1f}ms "
+          f"(queue {m['ttft_queue_avg_s']*1e3:.1f} + "
+          f"prefill {m['ttft_prefill_avg_s']*1e3:.1f}) "
+          f"completed={m['requests_completed']} cancelled={m['cancelled']} "
+          f"stopped={m['stopped_on_sequence']} "
+          f"deadline_misses={m['deadline_misses']} "
+          f"slot_resets={m['slot_resets']} stragglers={m['stragglers']}")
     if m["cache/backend"] in ("paged", "prefix"):
         print(f"{m['cache/backend']} cache: page_size={m['cache/page_size']} "
               f"pages={m['cache/pages_free']}/{m['cache/pages_total']} free "

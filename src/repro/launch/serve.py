@@ -1,5 +1,6 @@
 """Production serving driver: integer-path engine (packed weights +
-quantized KV cache) with continuous batching.
+quantized KV cache) with continuous batching over the request-lifecycle
+API v1 (submit / drain; per-request sampling, priority admission).
 
 On this container: PYTHONPATH=src python -m repro.launch.serve --smoke
 """
@@ -14,7 +15,7 @@ import numpy as np
 from repro import configs
 from repro.core.policy import get_policy
 from repro.models import model as M
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import SamplingParams, ServeEngine
 
 
 def main():
@@ -26,13 +27,19 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--scheduler", default="fcfs",
-                    choices=("fcfs", "spf", "bestfit"))
+                    choices=("fcfs", "spf", "bestfit", "priority"))
     ap.add_argument("--prefill", default="auto",
                     choices=("auto", "chunked", "stepwise"))
     ap.add_argument("--prefill-chunk", type=int, default=16)
     ap.add_argument("--cache", default="slot",
                     choices=("slot", "paged", "prefix"))
     ap.add_argument("--page-size", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy decode")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed + i")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -46,14 +53,20 @@ def main():
                       prefill_chunk=args.prefill_chunk, cache=args.cache,
                       page_size=args.page_size)
     rng = np.random.RandomState(0)
-    reqs = [Request(rid=i, prompt=rng.randint(1, cfg.vocab, size=4).astype(np.int32),
-                    max_new=args.max_new) for i in range(args.requests)]
-    out = eng.run(reqs)
-    done = sum(len(v) for v in out.values())
+    handles = [
+        eng.submit(rng.randint(1, cfg.vocab, size=4).astype(np.int32),
+                   SamplingParams(temperature=args.temperature,
+                                  top_k=args.top_k, top_p=args.top_p,
+                                  seed=args.seed + i, max_new=args.max_new))
+        for i in range(args.requests)]
+    eng.drain()
+    done = sum(len(h.result()) for h in handles)
     m = eng.metrics()
-    print(f"served {len(out)} requests / {done} tokens; "
+    print(f"served {len(handles)} requests / {done} tokens; "
           f"prefill={m['prefill_mode']} ({m['prefill_jit_calls']} jit calls); "
-          f"ttft avg {m['ttft_avg_s'] * 1e3:.1f} ms; "
+          f"ttft avg {m['ttft_avg_s'] * 1e3:.1f} ms "
+          f"(queue {m['ttft_queue_avg_s'] * 1e3:.1f} + "
+          f"prefill {m['ttft_prefill_avg_s'] * 1e3:.1f}); "
           f"tokens/s {m['tokens_per_s']:.1f}; "
           f"step ema {m['step_ema_s'] * 1e3:.1f} ms; "
           f"stragglers {m['stragglers']}")

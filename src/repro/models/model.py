@@ -580,6 +580,63 @@ def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
     return logits, new_caches
 
 
+def sample_tokens(logits: jax.Array, temps: jax.Array, top_k: jax.Array,
+                  top_p: jax.Array, seeds: jax.Array,
+                  counters: jax.Array) -> jax.Array:
+    """THE batched per-slot sampler — every token the serving engine emits
+    comes through here, whether from a decode step's logits or a prefill's
+    last-token logits (the engine fuses this into its jitted decode so the
+    hot loop stays a single jit; the prefill call traces once at B=1).
+
+    ``logits`` is (B, V); the per-slot vectors are (B,): ``temps`` f32
+    (0 => greedy argmax, bit-identical to the pre-sampler engines),
+    ``top_k`` i32 (0 => off), ``top_p`` f32 (1.0 => off), ``seeds`` u32,
+    ``counters`` i32 (tokens already emitted for the slot's request).
+
+    The PRNG is counter-based: token i of a request draws from
+    ``fold_in(PRNGKey(seed), i)`` — a pure function of (seed, i), so a
+    request's stream is independent of its slot, its batch neighbors, the
+    cache backend, and the kernel impl (jnp and pallas produce bit-equal
+    logits, so equal samples). Returns (B,) int32 token ids.
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def one(lg, t, k, p, seed, ctr):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), ctr)
+        lg = lg / jnp.maximum(t, 1e-6)
+        # ONE descending sort serves both truncations: top-k masking only
+        # sends sub-threshold entries to -inf / probability zero, so the
+        # pre-mask order is still a valid descending order of the masked
+        # distribution (every kept entry precedes every masked one)
+        order = jnp.argsort(-lg)
+        # top-k: keep logits >= the k-th largest (ties included; k<=0 off)
+        kth = lg[order[jnp.clip(k - 1, 0, lg.shape[0] - 1)]]
+        lg = jnp.where((k > 0) & (lg < kth), -jnp.inf, lg)
+        # top-p nucleus over the post-top-k distribution: keep the smallest
+        # descending-probability set whose mass reaches p (the first token
+        # is always kept: its preceding cumulative mass is 0 < p)
+        probs = jax.nn.softmax(lg)
+        sp = probs[order]
+        keep_sorted = (jnp.cumsum(sp) - sp) < p
+        keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
+        lg = jnp.where(keep, lg, -jnp.inf)
+        return jax.random.categorical(key, lg).astype(jnp.int32)
+
+    def stochastic(_):
+        sampled = jax.vmap(one)(logits, temps, top_k, top_p, seeds, counters)
+        # greedy lanes in a mixed batch keep their argmax (idle decode
+        # lanes ride here too: their temp is 0 and their token is discarded)
+        return jnp.where(temps > 0, sampled, greedy)
+
+    # runtime branch, not jnp.where: an all-greedy step (the default-params
+    # serving path, every lane idle or temp=0) must not pay the stochastic
+    # lane's O(B * V log V) sorts + categorical just to discard the result —
+    # lax.cond executes exactly one side
+    return jax.lax.cond(jnp.any(temps > 0), stochastic, lambda _: greedy,
+                        operand=None)
+
+
 #: Families whose caches are pure position-indexed KV stores — safe for
 #: batched/chunked prefill (right-padded chunk tails are masked out and later
 #: overwritten). Recurrent-state families (hybrid/rwkv) fold every token into

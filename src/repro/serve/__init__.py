@@ -2,20 +2,26 @@
 
 Layering (each module owns one concern; the engine only composes):
 
+  * :mod:`repro.serve.api`       — the request-lifecycle client surface:
+    ``SamplingParams`` (greedy | temperature/top-k/top-p, per-request
+    seed, stop sequences), ``Request`` lifecycle state, ``RequestHandle``
+    (streaming / result / cancel),
   * :mod:`repro.serve.cache`     — KV cache managers: dense slot stripes
     (``SlotCache``) or the paged page pool + block tables (``PagedKVCache``),
   * :mod:`repro.serve.prefix`    — prefix-sharing paged backend
     (``PrefixCache``): radix index over token pages, refcounted
     copy-on-write page reuse across requests,
   * :mod:`repro.serve.scheduler` — pluggable admission policy
-    (fcfs / spf / bestfit), page-budget aware,
+    (fcfs / spf / bestfit / priority), page-budget aware,
   * :mod:`repro.serve.prefill`   — chunked/batched vs token-by-token prompt
     ingestion (both cache backends),
   * :mod:`repro.serve.boundary`  — host->jit copy discipline (host_copy),
-  * :mod:`repro.serve.engine`    — the decode loop, streaming callbacks, and
-    the metrics snapshot.
+  * :mod:`repro.serve.engine`    — the decode+sample loop
+    (submit/step/drain/close, batch-compat run()), and the metrics
+    snapshot.
 """
 
+from repro.serve.api import Request, RequestHandle, SamplingParams
 from repro.serve.boundary import host_copy
 from repro.serve.cache import (
     CACHE_BACKENDS,
@@ -24,13 +30,14 @@ from repro.serve.cache import (
     SlotCache,
     make_cache,
 )
-from repro.serve.engine import KernelStatsAccumulator, Request, ServeEngine, StepMonitor
+from repro.serve.engine import KernelStatsAccumulator, ServeEngine, StepMonitor
 from repro.serve.prefill import ChunkedPrefill, StepwisePrefill, make_prefiller
 from repro.serve.prefix import PrefixCache
 from repro.serve.scheduler import (
     SCHEDULERS,
     BestFitScheduler,
     FCFSScheduler,
+    PriorityScheduler,
     Scheduler,
     ShortestPromptFirstScheduler,
     make_scheduler,
@@ -39,8 +46,9 @@ from repro.serve.scheduler import (
 __all__ = [
     "CACHE_BACKENDS", "CapacityError", "PagedKVCache", "PrefixCache", "SlotCache",
     "host_copy", "make_cache",
-    "KernelStatsAccumulator", "Request", "ServeEngine", "StepMonitor",
+    "KernelStatsAccumulator", "Request", "RequestHandle", "SamplingParams",
+    "ServeEngine", "StepMonitor",
     "ChunkedPrefill", "StepwisePrefill", "make_prefiller",
-    "SCHEDULERS", "BestFitScheduler", "FCFSScheduler", "Scheduler",
-    "ShortestPromptFirstScheduler", "make_scheduler",
+    "SCHEDULERS", "BestFitScheduler", "FCFSScheduler", "PriorityScheduler",
+    "Scheduler", "ShortestPromptFirstScheduler", "make_scheduler",
 ]

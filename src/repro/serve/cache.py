@@ -152,9 +152,11 @@ class SlotCache:
         return None
 
     def release(self, slot: int) -> None:
-        """Return a slot to the free pool. Rows are recycled lazily by the
-        next :meth:`acquire` (sessions with KV reuse across requests would
-        need an explicit affinity layer on top)."""
+        """Return a slot to the free pool — the one exit verb for EVERY way
+        a request leaves (budget exhausted, stop-sequence hit, cancelled
+        mid-decode). Rows are recycled lazily by the next :meth:`acquire`
+        (sessions with KV reuse across requests would need an explicit
+        affinity layer on top)."""
         self._busy[slot] = False
 
     # --- positions / rows --------------------------------------------------
@@ -376,10 +378,14 @@ class PagedKVCache:
         return None
 
     def release(self, slot: int) -> None:
-        """Completion: recycle the slot's pages back to the pool NOW — page
-        residency, not slot occupancy, is the capacity resource here, so
-        recycling cannot be deferred to the next acquire like the dense
-        backend does."""
+        """Release a request's pages back to the pool NOW — page residency,
+        not slot occupancy, is the capacity resource here, so recycling
+        cannot be deferred to the next acquire like the dense backend does.
+        This is the one exit verb for every way a request leaves (budget
+        exhausted, stop-sequence hit, cancelled mid-decode): the slot DROPS
+        ITS REFERENCES, and only pages whose last reader just left are
+        zeroed and freed — cancelling one of two prefix sharers decrefs,
+        never zeroes, the pages the survivor (or the index) still reads."""
         self._busy[slot] = False
         if self.pos[slot] or self._alloc[slot]:
             self.reset_slot(slot)

@@ -1,39 +1,52 @@
-"""Serving facade: request lifecycle over a modular serving stack.
+"""Serving facade: session-based request lifecycle over a modular stack.
 
-The engine is a thin composition of the serving subsystem's three parts —
-this module owns ONLY the decode loop and observability:
+The engine is a thin composition of the serving subsystem's parts — this
+module owns ONLY the decode loop, lifecycle bookkeeping, and observability:
 
+  * :mod:`repro.serve.api`                   — the client surface:
+    ``SamplingParams`` (greedy | temperature/top-k/top-p, per-request seed,
+    stop sequences), ``Request`` lifecycle state, ``RequestHandle``
+    (streaming iterator / result / cancel);
   * :mod:`repro.serve.cache`                 — cache rows/pages, per-slot
     write positions, recycling, capacity checks. Backend-selected:
     ``cache="slot"`` (dense per-slot stripes), ``cache="paged"`` (global
-    page pool + block tables — admission becomes a free-PAGE budget, so
-    concurrency at a fixed byte budget scales with prompt-length slack and
-    ``kv_cache_bits``), or ``cache="prefix"`` (paged + radix-indexed
-    copy-on-write prefix sharing across requests, serve/prefix.py);
+    page pool + block tables), or ``cache="prefix"`` (paged + radix-indexed
+    copy-on-write prefix sharing, serve/prefix.py);
   * :class:`repro.serve.scheduler.Scheduler` — admission order (pluggable:
-    ``fcfs`` / ``spf`` / ``bestfit`` / any Scheduler instance);
+    ``fcfs`` / ``spf`` / ``bestfit`` / ``priority`` / any instance);
   * :mod:`repro.serve.prefill`               — how prompts enter the cache
     (batched/chunked via ``model.prefill_into_slot`` /
     ``model.prefill_into_pages``, or token-by-token).
 
-Decode remains one jitted ``models.model.decode_step`` over ``n_slots``
-static slots with per-slot cache positions (continuous batching: admission
-happens while other slots keep decoding); on the paged backend the block
-tables ride along as a snapshot argument. The FIRST output token of every
-request is sampled from the prefill's own last-token logits — the seed
-engine re-fed ``prompt[-1]`` as a decode step, spending one extra step and
-one duplicate cache row per admission and discarding the prefill logits.
-``metrics()`` snapshots TTFT, throughput, queue depth, page-pool health,
-and straggler counts for the deployment layer (examples/serve_batched.py,
-launch/serve.py).
+Request lifecycle (API v1): ``submit(prompt, params, priority=, deadline=)``
+returns a :class:`RequestHandle`; the caller owns the loop via ``step()`` /
+``drain()`` / ``close()`` (``handle.tokens()`` streams by stepping on
+demand; ``handle.cancel()`` releases cache resources mid-decode —
+refcounted pages a surviving sharer still reads are decref'd, never
+zeroed). ``run()`` is a thin batch-mode compat wrapper over submit+drain.
+
+Decode remains ONE jitted call per step: ``models.model.decode_step`` over
+``n_slots`` static slots with per-slot cache positions (continuous
+batching: admission happens while other slots keep decoding), now fused
+with the ONE batched sampler ``models.model.sample_tokens`` — per-slot
+temperature/top-k/top-p/seed vectors and a counter-based PRNG key ride the
+same jit, so greedy slots still lower to the old argmax (bit-identical
+tokens) and stochastic slots stay reproducible and slot-independent. The
+FIRST output token of every request is sampled from the prefill's own
+last-token logits through that same sampler (the old engine had a second,
+hand-rolled argmax here). Completion, stop-sequence hits, and cancellation
+all route through one ``_release`` path that recycles cache resources,
+stamps lifecycle timestamps, and harvests kernel stats. ``metrics()``
+snapshots TTFT (with a queue-wait vs prefill-time split), throughput,
+lifecycle counters (cancelled / stopped_on_sequence / deadline_misses),
+queue depth, page-pool health, and straggler counts.
 """
 
 from __future__ import annotations
 
 import collections
-import dataclasses
 import time
-from typing import Callable, Optional, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -43,21 +56,22 @@ from repro.core.policy import PrecisionPolicy
 from repro.kernels import dispatch
 from repro.models import model as M
 from repro.models.model import ArchConfig
+from repro.serve.api import (
+    ACTIVE,
+    CANCELLED,
+    DONE,
+    QUEUED,
+    STOPPED,
+    Request,
+    RequestHandle,
+    SamplingParams,
+    as_params,
+    check_stop,
+)
 from repro.serve.boundary import host_copy
 from repro.serve.cache import PagedKVCache, SlotCache, make_cache
 from repro.serve.prefill import make_prefiller
 from repro.serve.scheduler import Scheduler, make_scheduler
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new: int = 16
-    out: Optional[list] = None
-    # lifecycle timestamps (engine-managed; metrics inputs)
-    t_submit: float = 0.0
-    t_first: float = 0.0
 
 
 class StepMonitor:
@@ -115,7 +129,6 @@ class ServeEngine:
 
     def __init__(self, params, cfg: ArchConfig, policy: PrecisionPolicy, *,
                  n_slots: int = 4, s_max: int = 64, impl="auto",
-                 greedy: bool = True,
                  scheduler: Union[str, Scheduler, None] = "fcfs",
                  prefill: str = "auto", prefill_chunk: int = 16,
                  cache: Union[str, SlotCache, PagedKVCache, None] = "slot",
@@ -127,7 +140,6 @@ class ServeEngine:
         dispatch.ensure_policy_supported(policy)
         self.n_slots, self.s_max = n_slots, s_max
         self.impl = impl
-        self.greedy = greedy
         self.cache = make_cache(cache, cfg, policy, n_slots, s_max,
                                 page_size=page_size, n_pages=n_pages)
         self.scheduler = make_scheduler(scheduler)
@@ -136,27 +148,49 @@ class ServeEngine:
         self.slot_req: list[Optional[Request]] = [None] * n_slots
         self.slot_remaining = np.zeros(n_slots, np.int32)
 
+        # per-slot sampling state: the vectors the fused sampler consumes.
+        # Idle slots carry temp=0 (greedy argmax, token discarded), so one
+        # trace serves every mix of greedy/stochastic/idle lanes.
+        self._temps = np.zeros(n_slots, np.float32)
+        self._top_ks = np.zeros(n_slots, np.int32)
+        self._top_ps = np.ones(n_slots, np.float32)
+        self._seeds = np.zeros(n_slots, np.uint32)
+        self._counters = np.zeros(n_slots, np.int32)
+
+        def decode_and_sample(p, tok, pos, caches, samp, bt=None):
+            logits, new_caches = M.decode_step(
+                p, tok, pos, caches, cfg, policy, impl=impl, block_tables=bt)
+            nxt = M.sample_tokens(logits[:, -1], *samp)
+            return nxt, logits, new_caches
+
         if self.cache.paged:
             self._decode = jax.jit(
-                lambda p, tok, pos, bt, caches: M.decode_step(
-                    p, tok, pos, caches, cfg, policy, impl=impl,
-                    block_tables=bt))
+                lambda p, tok, pos, bt, caches, samp: decode_and_sample(
+                    p, tok, pos, caches, samp, bt=bt))
         else:
-            self._decode = jax.jit(
-                lambda p, tok, pos, caches: M.decode_step(
-                    p, tok, pos, caches, cfg, policy, impl=impl))
+            self._decode = jax.jit(decode_and_sample)
+        # the SAME sampler, traced once more at B=1 for the prefill's
+        # last-token logits (the first output token of every request)
+        self._sample = jax.jit(M.sample_tokens)
         self.prefiller = make_prefiller(
             prefill, params, cfg, policy, impl=impl, chunk=prefill_chunk,
-            step_fn=self._step, n_slots=n_slots,
+            step_fn=lambda toks: self._step(toks)[1], n_slots=n_slots,
             page_size=self.cache.page_size if self.cache.paged else None)
 
         # metrics accumulators
         self._decode_steps = 0
         self._tokens_out = 0
         self._completed = 0
+        self._cancelled = 0
+        self._stopped_on_seq = 0
+        self._deadline_misses = 0
         self._ttft: list[float] = []
+        self._ttft_queue: list[float] = []    # submit -> admission
+        self._ttft_prefill: list[float] = []  # admission -> first token
         self._serve_seconds = 0.0
-        self._run_t0: Optional[float] = None  # set while run() is active
+        self._run_t0: Optional[float] = None  # set while a step is active
+        self._next_rid = 0
+        self._closed = False
 
     # --- kernel-matrix observability --------------------------------------
 
@@ -175,60 +209,187 @@ class ServeEngine:
         this engine's steps still land here."""
         return self._kstats.stats()
 
-    # --- request lifecycle -------------------------------------------------
+    # --- request lifecycle: submission --------------------------------------
+
+    def submit(self, prompt, params: Optional[SamplingParams] = None, *,
+               priority: int = 0, deadline: Optional[float] = None,
+               rid: Optional[int] = None,
+               on_token: Optional[Callable] = None) -> RequestHandle:
+        """Enqueue one request; returns a :class:`RequestHandle`.
+
+        ``params`` defaults to greedy ``SamplingParams()``. ``priority``
+        (higher admits first) and ``deadline`` (seconds from now; misses are
+        counted in ``metrics()``) are consumed by the ``"priority"``
+        scheduler and ignored by ordering-strict policies. Nothing decodes
+        until someone calls :meth:`step` / :meth:`drain` (or consumes the
+        handle). Raises :class:`~repro.serve.cache.CapacityError` if the
+        request can NEVER fit (reject-at-submit); merely having to wait for
+        capacity queues instead."""
+        params = params if params is not None else SamplingParams()
+        prompt = np.asarray(prompt, np.int32)
+        if rid is None:
+            rid = self._next_rid
+        req = Request(rid=rid, prompt=prompt, max_new=params.max_new,
+                      params=params, priority=priority, deadline=deadline,
+                      on_token=on_token)
+        return self._submit_request(req)
+
+    def _submit_request(self, req: Request) -> RequestHandle:
+        """Shared submission path (``submit()`` and the ``run()`` compat
+        wrapper): normalize params, validate capacity, stamp ``t_submit``,
+        hand to the scheduler."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        if req.params is None:  # legacy batch construction: greedy defaults
+            req.params = SamplingParams(max_new=req.max_new)
+        req.max_new = req.params.max_new
+        if len(req.prompt) == 0:
+            # reject HERE, not mid-_admit: failing after acquire() would
+            # leave a busy slot bound to a request with no tokens to feed,
+            # wedging every later step()
+            raise ValueError("prompt must hold at least one token")
+        self.cache.check_admissible(len(req.prompt) + req.max_new)
+        now = time.perf_counter()
+        req.t_submit = now
+        req.t_deadline = None if req.deadline is None else now + req.deadline
+        req.status = QUEUED
+        req.out = []
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        self.scheduler.submit([req])
+        return RequestHandle(self, req)
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a queued or active request, releasing whatever it holds.
+
+        Queued: removed from the scheduler (no cache state exists yet).
+        Active: its slot routes through the same ``_release`` path as
+        completion — on the paged backends its pages are decref'd and only
+        pages with no other reader are zeroed/recycled, so cancelling one
+        of two prefix sharers never perturbs the survivor. Returns False if
+        the request had already finished (idempotent)."""
+        if req.finished:
+            return False
+        if req.status == QUEUED:
+            if not self.scheduler.remove(req):
+                return False  # unknown request (never submitted here)
+            req.status = CANCELLED
+            req.t_done = time.perf_counter()
+            self._cancelled += 1
+            return True
+        self._release(req.slot, CANCELLED)
+        return True
+
+    def close(self) -> None:
+        """Cancel everything in flight and refuse further submissions.
+        Idempotent; the caches/jits stay warm for inspection but the engine
+        will not serve again."""
+        if self._closed:
+            return
+        while self.scheduler.pending():
+            req = self.scheduler.next_request()
+            req.status = CANCELLED
+            req.t_done = time.perf_counter()
+            self._cancelled += 1
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                self._release(s, CANCELLED)
+        self._closed = True
+
+    # --- request lifecycle: the loop ----------------------------------------
 
     def _step(self, toks: np.ndarray):
-        """One decode step with per-slot cache positions (vector pos).
+        """One fused decode+sample step with per-slot cache positions.
 
-        ``pos`` (and, on the paged backend, the block tables) crosses the
-        jit boundary through ``host_copy``: ``jnp.asarray`` zero-copy-aliases
-        numpy buffers on the CPU backend, and dispatch is async — handing
-        the live bookkeeping buffers to the decode while the caller then
-        advances positions / draws pages is a data race (the pre-refactor
-        engine's prefill loop hit exactly this: mutate-after-dispatch,
-        logits never consumed between steps, nondeterministic tokens under
-        load; see serve.boundary)."""
+        ``pos``, the block tables, and the per-slot sampling vectors cross
+        the jit boundary through ``host_copy``: ``jnp.asarray`` zero-copy-
+        aliases numpy buffers on the CPU backend, and dispatch is async —
+        handing the live bookkeeping buffers to the decode while the caller
+        then advances positions / draws pages / rewrites sampling state is
+        a data race (see serve.boundary). Returns (sampled (B,) int32,
+        logits (B, 1, V))."""
         t0 = time.perf_counter()
+        samp = (host_copy(self._temps), host_copy(self._top_ks),
+                host_copy(self._top_ps), host_copy(self._seeds),
+                host_copy(self._counters))
         if self.cache.paged:
-            logits, self.cache.caches = self._decode(
+            nxt, logits, self.cache.caches = self._decode(
                 self.params, jnp.asarray(toks), host_copy(self.cache.pos),
-                host_copy(self.cache.block_tables), self.cache.caches)
+                host_copy(self.cache.block_tables), self.cache.caches, samp)
         else:
-            logits, self.cache.caches = self._decode(
+            nxt, logits, self.cache.caches = self._decode(
                 self.params, jnp.asarray(toks), host_copy(self.cache.pos),
-                self.cache.caches)
+                self.cache.caches, samp)
         self.monitor.observe(time.perf_counter() - t0)
-        return logits
+        return nxt, logits
 
-    def _emit(self, slot: int, tok: int, results: dict,
-              on_token: Optional[Callable]) -> None:
-        """Record one generated token for the request bound to ``slot``,
-        completing and releasing the slot when its budget is spent."""
+    def _release(self, slot: int, status: str = DONE) -> None:
+        """THE exit path — completion, stop-sequence hit, and cancellation
+        all converge here: recycle the slot's cache resources (refcounted
+        pages a sharer still reads are decref'd, never zeroed), clear the
+        slot's sampling lanes back to idle/greedy, stamp lifecycle
+        timestamps, count the outcome, and harvest kernel stats."""
         r = self.slot_req[slot]
+        now = time.perf_counter()
+        r.status = status
+        r.t_done = now
+        if r.t_first == 0.0:  # defensive: released before any token
+            r.t_first = now
+        self.slot_req[slot] = None
+        self.slot_remaining[slot] = 0
+        self._temps[slot] = 0.0
+        self._top_ks[slot] = 0
+        self._top_ps[slot] = 1.0
+        self._seeds[slot] = 0
+        self._counters[slot] = 0
+        self.cache.release(slot)
+        if status == CANCELLED:
+            self._cancelled += 1
+        else:
+            self._completed += 1
+        if status == STOPPED:
+            self._stopped_on_seq += 1
+        # an SLO miss is a request WE finished too late; a client-initiated
+        # cancel is not a miss (and must count the same whether the request
+        # was still queued or already decoding when cancelled)
+        if (status != CANCELLED and r.t_deadline is not None
+                and now > r.t_deadline):
+            self._deadline_misses += 1
+        self._kstats.harvest()
+
+    def _emit(self, slot: int, tok: int) -> None:
+        """Record one generated token for the request bound to ``slot``,
+        releasing the slot on budget exhaustion or a stop-sequence hit."""
+        r = self.slot_req[slot]
+        tok = int(tok)
         r.out.append(tok)
         self.slot_remaining[slot] -= 1
+        self._counters[slot] = len(r.out)  # counter-based PRNG: next index
         self._tokens_out += 1
-        if on_token:
-            on_token(r.rid, tok)
-        if self.slot_remaining[slot] <= 0:
-            results[r.rid] = r.out
-            self.slot_req[slot] = None
-            self.cache.release(slot)
-            self._completed += 1
+        if len(r.out) == 1:
+            now = time.perf_counter()
+            r.t_first = now  # stamped HERE, so max_new=1 requests get one too
+            self._ttft.append(now - r.t_submit)
+            self._ttft_queue.append(r.t_admit - r.t_submit)
+            self._ttft_prefill.append(now - r.t_admit)
+        if r.on_token:
+            r.on_token(r.rid, tok)
+        if r.status != ACTIVE:  # the callback cancelled us mid-emit
+            return
+        if check_stop(r.out, r.params.stop):
+            self._release(slot, STOPPED)
+        elif self.slot_remaining[slot] <= 0:
+            self._release(slot, DONE)
 
-    def _admit(self, results: dict, on_token: Optional[Callable]) -> None:
+    def _admit(self) -> None:
         """Admit waiting requests into free capacity (continuous batching:
         admission runs between decode steps, while other slots decode).
 
         The scheduler picks under the cache's admission predicate — on the
         paged backend that is the free-page budget, not just a free slot —
         and its admission-cost metric (the prefix backend charges only the
-        UNMATCHED pages, so the packing policy ranks by post-match need).
-        The FIRST output token is sampled here, from the prefill's own
-        last-token logits: the seed engine discarded them and re-fed
-        ``prompt[-1]`` as a decode step, costing one extra step and one
-        duplicate cache row per admission (ROADMAP open item, now closed).
-        """
+        UNMATCHED pages). The FIRST output token is sampled here from the
+        prefill's own last-token logits, through the same batched sampler
+        the decode step fuses (counter 0 of the request's PRNG stream)."""
         fits = lambda r: self.cache.can_admit(  # noqa: E731
             len(r.prompt) + r.max_new, prompt=r.prompt)
         cost = lambda r: self.cache.admission_cost(  # noqa: E731
@@ -240,70 +401,101 @@ class ServeEngine:
             if slot is None:  # no slot / page budget: requeue at the front
                 self.scheduler.requeue(req)
                 return
+            req.status = ACTIVE
+            req.slot = slot
+            req.t_admit = time.perf_counter()
+            p = as_params(req)
+            self._temps[slot] = p.temperature
+            self._top_ks[slot] = p.top_k
+            self._top_ps[slot] = p.top_p
+            self._seeds[slot] = p.seed
+            self._counters[slot] = 0
+            self.slot_req[slot] = req
+            self.slot_remaining[slot] = req.max_new
             # prefix backend: acquire() mapped the matched prefix and set
             # pos[slot] past it; the prefiller skips those tokens and the
             # post-prefill commit publishes the new full pages to the index
             logits = self.prefiller.prefill(self.cache, slot, req.prompt)
             self.cache.commit(slot, req.prompt)
-            req.out = []
-            self.slot_req[slot] = req
-            self.slot_remaining[slot] = req.max_new
-            now = time.perf_counter()
-            req.t_first = now
-            self._ttft.append(now - req.t_submit)
-            first = int(np.asarray(jnp.argmax(logits[0, -1])))
-            self._emit(slot, first, results, on_token)
+            first = self._sample(
+                logits[:, -1],
+                jnp.float32([p.temperature]), jnp.int32([p.top_k]),
+                jnp.float32([p.top_p]), jnp.uint32([p.seed]),
+                jnp.int32([0]))
+            self._emit(slot, int(np.asarray(first)[0]))
 
     def _active(self) -> bool:
         return any(r is not None for r in self.slot_req)
 
-    def run(self, requests: list[Request], *, on_token: Optional[Callable] = None):
-        """Drive all requests to completion; returns {rid: [token, ...]}."""
-        # validate BEFORE marking a run active: a can-never-fit request must
-        # not leave _run_t0 set (metrics() would keep accruing elapsed time
-        # for a run that never happened)
+    def step(self) -> bool:
+        """One engine iteration — admit waiting requests, then one fused
+        decode+sample step for every active slot. The caller owns the loop:
+        ``drain()``, ``handle.tokens()``, and ``handle.result()`` all lower
+        to repeated ``step()`` calls. Returns True while work remains."""
+        if self._closed:
+            raise RuntimeError("engine is closed")
+        t0 = time.perf_counter()
+        self._run_t0 = t0
+        try:
+            self._admit()
+            if self._active():
+                # one decode step for every active slot: feed each slot's
+                # last generated token (never prompt[-1] — prefill already
+                # sampled the first token from its own logits)
+                toks = np.zeros((self.n_slots, 1), np.int32)
+                for s, r in enumerate(self.slot_req):
+                    if r is not None:
+                        toks[s, 0] = r.out[-1]
+                        self.cache.prepare(s, 1)  # paged: draw the next page
+                nxt, _ = self._step(toks)
+                self._decode_steps += 1
+                nxt = np.asarray(nxt)
+                for s in range(self.n_slots):
+                    if self.slot_req[s] is None:
+                        continue
+                    self.cache.advance(s, 1)
+                    self._emit(s, int(nxt[s]))
+        finally:
+            self._serve_seconds += time.perf_counter() - t0
+            self._run_t0 = None
+        return bool(self.scheduler.pending() or self._active())
+
+    def drain(self) -> None:
+        """Step until no queued or active work remains."""
+        while self.step():
+            pass
+
+    def run(self, requests: Sequence[Request], *,
+            on_token: Optional[Callable] = None):
+        """Batch-mode compat wrapper (the PR-2..4 surface): submit every
+        request, drain, return ``{rid: [token, ...]}``. Requests default to
+        greedy sampling (via their legacy ``max_new``), so tokens are
+        bit-identical to the pre-v1 engines."""
+        # validate EVERYTHING before submitting ANYTHING: a can-never-fit
+        # request must leave no partial submission (and no active-run
+        # marker; metrics() would keep accruing elapsed time otherwise)
         for r in requests:
-            self.cache.check_admissible(len(r.prompt) + r.max_new)
-        t_run = time.perf_counter()
-        self._run_t0 = t_run
+            need = len(r.prompt) + (r.params.max_new if r.params is not None
+                                    else r.max_new)
+            self.cache.check_admissible(need)
         for r in requests:
-            r.t_submit = t_run
-        self.scheduler.submit(requests)
-        results: dict[int, list[int]] = {}
-        while self.scheduler.pending() or self._active():
-            self._admit(results, on_token)
-            if not self._active():  # e.g. max_new=1 completes at admission
-                continue
-            # one decode step for every active slot: feed each slot's last
-            # generated token (never prompt[-1] — prefill already sampled
-            # the first token from its own logits)
-            toks = np.zeros((self.n_slots, 1), np.int32)
-            for s, r in enumerate(self.slot_req):
-                if r is not None:
-                    toks[s, 0] = r.out[-1]
-                    self.cache.prepare(s, 1)  # paged: draw the next page
-            logits = self._step(toks)
-            self._decode_steps += 1
-            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-            for s in range(self.n_slots):
-                if self.slot_req[s] is None:
-                    continue
-                self.cache.advance(s, 1)
-                self._emit(s, int(nxt[s]), results, on_token)
-            self._kstats.harvest()
-        self._serve_seconds += time.perf_counter() - t_run
-        self._run_t0 = None
-        return results
+            if on_token is not None:
+                r.on_token = on_token
+            self._submit_request(r)
+        self.drain()
+        return {r.rid: r.out for r in requests}
 
     # --- observability ------------------------------------------------------
 
     def metrics(self) -> dict:
-        """Serving metrics snapshot: latency (TTFT), throughput, backlog,
+        """Serving metrics snapshot: latency (TTFT, split into queue wait vs
+        prefill time), throughput, lifecycle counters (completed /
+        cancelled / stopped_on_sequence / deadline_misses), backlog,
         cache-backend health (page utilization / fragmentation / effective
         bytes-per-token on the paged backend), and the straggler count from
         the StepMonitor — the numbers a deployment scrapes
         (examples/serve_batched.py prints this). Safe to call mid-run (e.g.
-        from an on_token callback): the active run's elapsed time is
+        from an on_token callback): the active step's elapsed time is
         included in the throughput denominator."""
         elapsed = self._serve_seconds
         if self._run_t0 is not None:
@@ -314,6 +506,9 @@ class ServeEngine:
             # never collide with (or shadow) the engine's own counters
             **{f"cache/{k}": v for k, v in self.cache.stats().items()},
             "requests_completed": self._completed,
+            "cancelled": self._cancelled,
+            "stopped_on_sequence": self._stopped_on_seq,
+            "deadline_misses": self._deadline_misses,
             "tokens_generated": self._tokens_out,
             "tokens_per_s": self._tokens_out / elapsed,
             "decode_steps": self._decode_steps,
@@ -322,6 +517,10 @@ class ServeEngine:
             "prefill_jit_calls": self.prefiller.jit_calls,
             "ttft_avg_s": float(np.mean(self._ttft)) if self._ttft else 0.0,
             "ttft_max_s": float(np.max(self._ttft)) if self._ttft else 0.0,
+            "ttft_queue_avg_s": (float(np.mean(self._ttft_queue))
+                                 if self._ttft_queue else 0.0),
+            "ttft_prefill_avg_s": (float(np.mean(self._ttft_prefill))
+                                   if self._ttft_prefill else 0.0),
             "queue_depth": self.scheduler.pending(),
             "active_slots": self.cache.active_slots(),
             "slot_resets": self.cache.resets,

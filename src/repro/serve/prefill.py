@@ -18,8 +18,11 @@ recurrent-state families whose caches absorb every token unconditionally and
 
 Both strategies call ``cache.prepare(slot, n)`` before writing n rows — the
 paged backend draws physical pages on demand there — and RETURN the last
-real prompt token's logits, which the engine now samples the first output
-token from (no duplicate ``prompt[-1]`` decode step; see ServeEngine).
+real prompt token's logits, which the engine feeds to the SAME batched
+sampler its decode step fuses (``models.model.sample_tokens``, counter 0 of
+the request's PRNG stream): the first output token costs no decode step and
+no duplicate ``prompt[-1]`` cache row, and greedy/stochastic behavior is
+identical between the first token and every later one (see ServeEngine).
 
 Both also SKIP the already-cached prefix: the slot's write position at
 prefill time is the number of prompt tokens the cache manager has already
@@ -126,11 +129,14 @@ class ChunkedPrefill:
 class StepwisePrefill:
     """Token-by-token prefill through the engine's full-batch decode step.
 
-    ``step_fn`` is the engine's jitted ``(n_slots, 1)`` decode (other slots
+    ``step_fn`` maps an ``(n_slots, 1)`` token batch to that step's logits
+    — the engine passes an adapter over its fused decode+sample jit that
+    returns the logits and discards the sampled lane tokens (sampling
+    during a prefill step is idle-lane work by definition). Other slots
     receive token 0; their write positions do not advance, so any transient
     row writes are overwritten by their next real step — or, on the paged
     backend, land in the scratch page their unallocated block-table entries
-    point at). This is the pre-refactor data path, byte for byte.
+    point at. This is the pre-refactor data path, byte for byte.
     """
 
     name = "stepwise"

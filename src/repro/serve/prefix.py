@@ -38,6 +38,14 @@ Admission keeps the paged backend's no-mid-decode-exhaustion guarantee:
 ``acquire`` reserves the request's unmatched worst case and eagerly evicts
 until the whole reservation is drawable, so ``prepare`` can never stall on
 a page another request might need back.
+
+Cancellation (request-lifecycle API v1) needs no backend-specific code:
+a cancelled sharer leaves through the same ``release`` verb as completion,
+which DECREFS its mapped pages — a page another block table or the index
+still reads keeps its bits and its residency; only last-reader pages are
+zeroed and freed. The engine-level churn test in tests/test_prefix.py cancels
+sharers mid-decode at random and holds the pool conservation invariant and
+the survivors' token streams fixed.
 """
 
 from __future__ import annotations

@@ -2,9 +2,10 @@
 
 A :class:`Scheduler` owns the waiting-request queue and decides which request
 is admitted when capacity frees up (continuous batching admits mid-decode,
-so this runs on every engine step). The engine only sees four verbs — submit,
-pending, next_request, requeue — which is the seam async admission and
-multi-engine routing PRs extend.
+so this runs on every engine step). The engine only sees five verbs — submit,
+pending, next_request, requeue, remove (the cancellation hook: a queued
+request leaves the system without ever holding cache state) — which is the
+seam async admission and multi-engine routing PRs extend.
 
 Since the paged-cache refactor, admission capacity is a PAGE budget, not a
 slot count: the engine passes ``next_request`` a ``fits`` predicate ("would
@@ -16,14 +17,20 @@ actually is). Policies may consult them (best-fit packs the pool by cost)
 or ignore them (fcfs/spf preserve strict ordering; a non-fitting pick
 simply requeues and waits).
 
-Three policies prove the interface:
-  * ``fcfs``    — first-come-first-served, the pre-refactor behavior,
-  * ``spf``     — shortest-prompt-first: minimizes mean TTFT when prompt
+Four policies prove the interface:
+  * ``fcfs``     — first-come-first-served, the pre-refactor behavior,
+  * ``spf``      — shortest-prompt-first: minimizes mean TTFT when prompt
     lengths are skewed (short interactive prompts stop queueing behind
     long ones),
-  * ``bestfit`` — largest waiting request that still fits the current page
+  * ``bestfit``  — largest waiting request that still fits the current page
     budget: packs the page pool under mixed request sizes instead of
-    head-of-line blocking behind a request the pool cannot hold yet.
+    head-of-line blocking behind a request the pool cannot hold yet,
+  * ``priority`` — request-lifecycle API v1: highest ``priority`` first
+    among the requests that fit right now; within a priority class,
+    earliest absolute deadline first (EDF), then the deadline-aware
+    admission-cost tie-break (the cheaper request frees capacity for the
+    urgent backlog sooner), then arrival order. The engine stamps
+    ``t_deadline`` at submit and counts ``deadline_misses`` at release.
 """
 
 from __future__ import annotations
@@ -69,6 +76,16 @@ class Scheduler:
         """Put a popped request back at the head (admission found no slot
         or page budget for it — it keeps its place in line)."""
         self._queue.insert(0, request)
+
+    def remove(self, request) -> bool:
+        """Drop a specific waiting request from the queue (cancellation of
+        a not-yet-admitted request). Returns False when the request is not
+        queued here — the caller treats that as already-admitted-or-done."""
+        try:
+            self._queue.remove(request)
+            return True
+        except ValueError:
+            return False
 
 
 class FCFSScheduler(Scheduler):
@@ -119,10 +136,44 @@ class BestFitScheduler(Scheduler):
         return max(fitting, key=lambda i: (rank(self._queue[i]), -i))
 
 
+class PriorityScheduler(Scheduler):
+    """Strict-priority admission with deadline- and cost-aware tie-breaks.
+
+    Among the waiting requests that FIT the current capacity (so an urgent
+    request too big for the budget right now cannot head-of-line block the
+    rest of its class), admit the highest ``request.priority``; ties break
+    by earliest absolute deadline (``t_deadline``; requests without one
+    rank after every deadline), then by the engine's admission-cost metric
+    (cheaper requests release capacity back to the urgent backlog sooner —
+    on the prefix backend that is the POST-MATCH page need), then arrival.
+    When nothing fits (or no ``fits`` predicate is supplied) the head is
+    returned and the engine requeues it — strict FIFO degradation."""
+
+    name = "priority"
+
+    def pick(self, fits: Optional[FitsFn] = None,
+             cost: Optional[CostFn] = None) -> int:
+        fitting = ([i for i, r in enumerate(self._queue) if fits(r)]
+                   if fits is not None else list(range(len(self._queue))))
+        if not fitting:
+            return 0
+
+        def key(i):
+            r = self._queue[i]
+            dl = getattr(r, "t_deadline", None)
+            return (-getattr(r, "priority", 0),
+                    dl if dl is not None else float("inf"),
+                    cost(r) if cost is not None else 0,
+                    i)
+
+        return min(fitting, key=key)
+
+
 SCHEDULERS: dict[str, type] = {
     FCFSScheduler.name: FCFSScheduler,
     ShortestPromptFirstScheduler.name: ShortestPromptFirstScheduler,
     BestFitScheduler.name: BestFitScheduler,
+    PriorityScheduler.name: PriorityScheduler,
 }
 
 

@@ -1,0 +1,431 @@
+"""Request-lifecycle API v1 tests (fast tier): SamplingParams validation,
+submit/step/drain/close session flow, streaming handles, greedy ==
+pre-v1-argmax bit-exactness through the unified sampler, seeded-sampling
+reproducibility (same seed => same tokens across ``impl jnp``/``pallas``;
+different seeds => per-slot independence), stop-sequence completion,
+cancellation resource release on every cache backend, the priority/deadline
+scheduler, and the lifecycle metrics (cancelled / stopped_on_sequence /
+deadline_misses / queue-wait vs prefill-time TTFT split)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import get_policy
+from repro.serve import (
+    CapacityError,
+    Request,
+    SamplingParams,
+    ServeEngine,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = configs.reduced(configs.get_arch("internlm2-1.8b"))
+POLICY = get_policy("w4a8")
+
+
+@pytest.fixture(scope="module")
+def params():
+    from repro.models import model as M
+    return M.init_params(jax.random.key(3), TINY, POLICY, mode="serve")
+
+
+def _engine(params, **kw):
+    base = dict(n_slots=2, s_max=32, impl="jnp", prefill="chunked",
+                prefill_chunk=4)
+    base.update(kw)
+    return ServeEngine(params, TINY, POLICY, **base)
+
+
+def _prompt(n=5, seed=0):
+    return np.random.RandomState(seed).randint(
+        1, TINY.vocab, size=n).astype(np.int32)
+
+
+# ------------------------------------------------------ SamplingParams
+
+
+def test_sampling_params_validation():
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+    with pytest.raises(ValueError, match="temperature"):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError, match="max_new"):
+        SamplingParams(max_new=0)
+    with pytest.raises(ValueError, match="stop"):
+        SamplingParams(stop=((),))
+    # a single flat stop sequence wraps; seeds normalize to uint32 range
+    p = SamplingParams(stop=(1, 2, 3), seed=-1)
+    assert p.stop == ((1, 2, 3),)
+    assert p.seed == (1 << 32) - 1
+    # numpy inputs are first-class: token ids in this codebase are np.int32
+    # (stop=prompt[-2:] must not hit ndarray truthiness or isinstance(int))
+    assert SamplingParams(stop=np.array([3, 4], np.int32)).stop == ((3, 4),)
+    assert SamplingParams(
+        stop=(np.int32(3), np.int32(4))).stop == ((3, 4),)
+    assert SamplingParams(stop=np.array([], np.int32)).stop == ()
+    # frozen + hashable: one params object serves many requests
+    with pytest.raises(Exception):
+        p.seed = 0
+    assert hash(SamplingParams()) == hash(SamplingParams())
+
+
+# ------------------------------------------------- session flow / streaming
+
+
+def test_submit_stream_result_flow(params):
+    """submit() -> handle.tokens() streams exactly the tokens result()
+    reports, the engine idles when drained, and run() compat output matches
+    the handle-driven path token for token."""
+    eng = _engine(params)
+    h = eng.submit(_prompt(), SamplingParams(max_new=5))
+    assert h.status == "queued" and not h.done
+    streamed = list(h.tokens())
+    assert h.done and h.status == "done"
+    assert streamed == h.result() and len(streamed) == 5
+    assert eng.step() is False  # drained: no queued or active work
+
+    eng2 = _engine(params)
+    out = eng2.run([Request(rid=0, prompt=_prompt(), max_new=5)])
+    assert out[0] == streamed  # compat wrapper == session API, bit for bit
+
+
+def test_streaming_is_incremental(params):
+    """tokens() yields before the request finishes — the consuming loop can
+    observe (and react to) every token as it is generated."""
+    eng = _engine(params)
+    h = eng.submit(_prompt(), SamplingParams(max_new=6))
+    it = h.tokens()
+    first = next(it)
+    assert isinstance(first, int)
+    assert not h.done  # 5 tokens still owed: the stream is live, not batch
+    assert len(list(it)) == 5
+
+
+def test_multiple_handles_interleave(params):
+    """Two handles drain through the same continuous-batching loop; each
+    sees only its own stream."""
+    eng = _engine(params)
+    h1 = eng.submit(_prompt(5, seed=1), SamplingParams(max_new=4))
+    h2 = eng.submit(_prompt(5, seed=2), SamplingParams(max_new=4))
+    r1, r2 = h1.result(), h2.result()
+    assert len(r1) == 4 and len(r2) == 4
+    assert eng.metrics()["requests_completed"] == 2
+
+
+def test_submit_rejects_can_never_fit(params):
+    eng = _engine(params, n_slots=1, s_max=8)
+    with pytest.raises(CapacityError, match="s_max"):
+        eng.submit(_prompt(7), SamplingParams(max_new=4))
+
+
+def test_submit_rejects_empty_prompt(params):
+    """An empty prompt must fail at the submit seam — admitting it would
+    acquire a slot, crash in prefill, and wedge the engine forever."""
+    eng = _engine(params)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit(np.array([], np.int32), SamplingParams(max_new=4))
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.run([Request(rid=0, prompt=np.array([], np.int32), max_new=4)])
+    # the engine is untouched and still serves
+    assert len(eng.submit(_prompt(), SamplingParams(max_new=2)).result()) == 2
+
+
+def test_close_cancels_everything(params):
+    eng = _engine(params, n_slots=1)
+    h1 = eng.submit(_prompt(5, seed=1), SamplingParams(max_new=8))
+    h2 = eng.submit(_prompt(5, seed=2), SamplingParams(max_new=8))
+    eng.step()  # h1 admitted + first token; h2 still queued
+    eng.close()
+    assert h1.status == "cancelled" and h2.status == "cancelled"
+    assert eng.metrics()["cancelled"] == 2
+    assert eng.metrics()["active_slots"] == 0
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(_prompt(), SamplingParams())
+    eng.close()  # idempotent
+
+
+# ---------------------------------------------- greedy == argmax, unified
+
+
+def test_greedy_default_params_match_legacy_run(params):
+    """A request submitted with explicit greedy SamplingParams decodes
+    bit-identically to the legacy Request(max_new=) batch construction —
+    the sampler's temp=0 lane IS the old argmax, first token included."""
+    prompt = _prompt(9)
+    legacy = _engine(params).run(
+        [Request(rid=0, prompt=prompt.copy(), max_new=6)])[0]
+    h = _engine(params).submit(prompt.copy(), SamplingParams(max_new=6))
+    assert h.result() == legacy
+
+
+def test_max_new_1_lifecycle_timestamps(params):
+    """The early-release seam: a max_new=1 request completes at admission
+    (zero decode steps) and still gets t_first/t_done stamped and a TTFT
+    split recorded — the old engine could skip t_first here."""
+    eng = _engine(params, n_slots=1)
+    h = eng.submit(_prompt(), SamplingParams(max_new=1))
+    h.result()
+    r = h.request
+    assert r.t_submit <= r.t_admit <= r.t_first <= r.t_done
+    assert r.t_first > 0.0
+    m = eng.metrics()
+    assert m["decode_steps"] == 0
+    assert m["ttft_queue_avg_s"] >= 0.0 and m["ttft_prefill_avg_s"] > 0.0
+    assert m["ttft_avg_s"] == pytest.approx(
+        m["ttft_queue_avg_s"] + m["ttft_prefill_avg_s"], abs=1e-6)
+
+
+# ------------------------------------------------------- seeded sampling
+
+
+def _seeded_tokens(params, *, impl, seed, cache="slot", max_new=8, **ekw):
+    eng = _engine(params, impl=impl, cache=cache, **ekw)
+    h = eng.submit(_prompt(6, seed=9),
+                   SamplingParams(temperature=0.9, top_k=16, top_p=0.95,
+                                  seed=seed, max_new=max_new))
+    return h.result()
+
+
+def test_seeded_sampling_reproducible_run_to_run(params):
+    a = _seeded_tokens(params, impl="jnp", seed=7)
+    b = _seeded_tokens(params, impl="jnp", seed=7)
+    assert a == b
+
+
+def test_seeded_sampling_matches_across_impls(params):
+    """jnp and pallas produce bit-equal logits (the twin contract), and the
+    sampler is a pure function of (logits, params, counter) — so the
+    sampled stream is impl-invariant, not just the greedy one."""
+    a = _seeded_tokens(params, impl="jnp", seed=7, max_new=3)
+    b = _seeded_tokens(params, impl="pallas", seed=7, max_new=3)
+    assert a == b
+
+
+def test_seeded_sampling_backend_invariant(params):
+    """The stream depends on (seed, counter), never on the cache backend:
+    slot, paged, and prefix engines emit identical stochastic tokens."""
+    a = _seeded_tokens(params, impl="jnp", seed=11)
+    b = _seeded_tokens(params, impl="jnp", seed=11, cache="paged",
+                       page_size=4)
+    c = _seeded_tokens(params, impl="jnp", seed=11, cache="prefix",
+                       page_size=4)
+    assert a == b == c
+
+
+def test_different_seeds_independent_per_slot(params):
+    """Two requests with the SAME prompt and different seeds, decoding in
+    the same batch, draw independent streams (counter-based keys are
+    per-request, not per-step), and each equals its solo-run stream."""
+    eng = _engine(params)
+    prompt = _prompt(6, seed=9)
+    mk = lambda s: SamplingParams(  # noqa: E731
+        temperature=0.9, top_k=16, top_p=0.95, seed=s, max_new=8)
+    h1 = eng.submit(prompt.copy(), mk(7))
+    h2 = eng.submit(prompt.copy(), mk(8))
+    eng.drain()
+    assert h1.result() != h2.result()
+    # batch composition does not leak into the stream
+    assert h1.result() == _seeded_tokens(params, impl="jnp", seed=7)
+
+
+def test_temperature_zero_slots_untouched_by_stochastic_neighbors(params):
+    """A greedy request batched next to a stochastic one still decodes its
+    argmax stream bit-for-bit (per-slot sampling lanes are independent)."""
+    prompt = _prompt(9)
+    solo = _engine(params).run(
+        [Request(rid=0, prompt=prompt.copy(), max_new=6)])[0]
+    eng = _engine(params)
+    hg = eng.submit(prompt.copy(), SamplingParams(max_new=6))
+    eng.submit(_prompt(5, seed=3),
+               SamplingParams(temperature=1.0, seed=5, max_new=6))
+    eng.drain()
+    assert hg.result() == solo
+
+
+def test_top_k_1_is_greedy(params):
+    """top_k=1 at any temperature truncates to the argmax token — the
+    stochastic path degenerates to greedy, a direct sampler sanity check."""
+    prompt = _prompt(9)
+    greedy = _engine(params).submit(
+        prompt.copy(), SamplingParams(max_new=5)).result()
+    k1 = _engine(params).submit(
+        prompt.copy(),
+        SamplingParams(temperature=1.0, top_k=1, seed=3, max_new=5)).result()
+    assert k1 == greedy
+
+
+# ------------------------------------------------------------ stop sequences
+
+
+def test_stop_sequence_completes_early_and_releases(params):
+    eng = _engine(params, n_slots=1)
+    full = eng.submit(_prompt(), SamplingParams(max_new=8)).result()
+    stop = tuple(full[2:4])
+
+    eng2 = _engine(params, n_slots=1, cache="paged", page_size=4)
+    h = eng2.submit(_prompt(), SamplingParams(max_new=8, stop=(stop,)))
+    out = h.result()
+    assert h.status == "stopped"
+    assert out == full[:4]  # stop tokens included, generation halted
+    m = eng2.metrics()
+    assert m["stopped_on_sequence"] == 1
+    assert m["requests_completed"] == 1  # stopped counts as completed
+    assert m["cache/pages_free"] == m["cache/pages_total"]  # all released
+
+
+def test_stop_sequence_on_first_token(params):
+    """A stop hit on the prefill-sampled first token releases at admission
+    — the _release seam works before any decode step exists."""
+    eng = _engine(params, n_slots=1)
+    first = eng.submit(_prompt(), SamplingParams(max_new=4)).result()[0]
+    eng2 = _engine(params, n_slots=1)
+    h = eng2.submit(_prompt(), SamplingParams(max_new=4, stop=((first,),)))
+    assert h.result() == [first]
+    assert h.status == "stopped"
+    assert eng2.metrics()["decode_steps"] == 0
+
+
+# -------------------------------------------------------------- cancellation
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("slot", {}), ("paged", {"page_size": 4}), ("prefix", {"page_size": 4})])
+def test_cancel_active_releases_resources(params, backend, kw):
+    """Mid-decode cancel releases the slot (and pages) on every backend;
+    the other in-flight request is unperturbed."""
+    eng = _engine(params, cache=backend, **kw)
+    solo = _engine(params, cache=backend, **kw).submit(
+        _prompt(5, seed=2), SamplingParams(max_new=6)).result()
+    hc = eng.submit(_prompt(5, seed=1), SamplingParams(max_new=6))
+    hs = eng.submit(_prompt(5, seed=2), SamplingParams(max_new=6))
+    eng.step()
+    eng.step()  # both admitted, a couple tokens in
+    assert hc.cancel()
+    assert not hc.cancel()  # idempotent: already terminal
+    assert hc.status == "cancelled" and len(hc.request.out) >= 1
+    eng.drain()
+    assert hs.result() == solo  # survivor's tokens unchanged
+    m = eng.metrics()
+    assert m["cancelled"] == 1 and m["requests_completed"] == 1
+    assert m["active_slots"] == 0
+    if backend != "slot":
+        live = eng.cache.pages_live()
+        index = (eng.cache.index_pages() if backend == "prefix" else 0)
+        assert live == index  # nothing leaked beyond the warm index
+
+
+def test_cancel_queued_request(params):
+    eng = _engine(params, n_slots=1)
+    h1 = eng.submit(_prompt(5, seed=1), SamplingParams(max_new=6))
+    h2 = eng.submit(_prompt(5, seed=2), SamplingParams(max_new=6))
+    assert h2.cancel()  # still queued: no cache state to release
+    assert h2.status == "cancelled" and h2.result() == []
+    eng.drain()
+    assert h1.status == "done" and len(h1.result()) == 6
+    assert eng.metrics()["cancelled"] == 1
+    assert eng.metrics()["queue_depth"] == 0
+
+
+def test_cancel_queued_is_identity_based(params):
+    """Requests are identities, not values: cancelling one of two queued
+    requests with the SAME rid and equal-length prompts removes exactly
+    that request (dataclass field equality would compare prompt ndarrays —
+    an ambiguous truth value the remove path must never hit)."""
+    eng = _engine(params, n_slots=1)
+    h1 = eng.submit(_prompt(5, seed=1), SamplingParams(max_new=2), rid=7)
+    h2 = eng.submit(_prompt(5, seed=2), SamplingParams(max_new=2), rid=7)
+    assert h2.cancel()
+    assert h2.status == "cancelled" and h1.status == "queued"
+    eng.drain()
+    assert h1.status == "done" and len(h1.result()) == 2
+
+
+def test_cancel_from_streaming_loop(params):
+    """handle.cancel() inside the tokens() consuming loop stops the stream
+    after the tokens generated so far (the _emit re-entrancy guard)."""
+    eng = _engine(params, n_slots=1)
+    h = eng.submit(_prompt(), SamplingParams(max_new=8))
+    got = []
+    for t in h.tokens():
+        got.append(t)
+        if len(got) == 3:
+            h.cancel()
+    assert len(got) == 3 and h.status == "cancelled"
+    assert eng.step() is False
+
+
+# --------------------------------------------------------- priority/deadline
+
+
+def test_priority_scheduler_orders_admission(params):
+    """One slot => first-token order is admission order: higher priority
+    admits first; FIFO within a class."""
+    eng = _engine(params, n_slots=1, scheduler="priority")
+    hs = [eng.submit(_prompt(4, seed=i), SamplingParams(max_new=2),
+                     priority=p)
+          for i, p in enumerate((0, 5, 1, 5))]
+    eng.drain()
+    order = sorted(range(4), key=lambda i: hs[i].request.t_admit)
+    assert order == [1, 3, 2, 0]
+
+
+def test_priority_ties_break_by_deadline(params):
+    """Within a priority class the policy is EDF: the tighter deadline
+    admits first regardless of arrival order."""
+    eng = _engine(params, n_slots=1, scheduler="priority")
+    h_late = eng.submit(_prompt(4, seed=1), SamplingParams(max_new=2),
+                        deadline=60.0)
+    h_tight = eng.submit(_prompt(4, seed=2), SamplingParams(max_new=2),
+                         deadline=1.0)
+    h_none = eng.submit(_prompt(4, seed=3), SamplingParams(max_new=2))
+    eng.drain()
+    assert (h_tight.request.t_admit < h_late.request.t_admit
+            < h_none.request.t_admit)
+
+
+def test_deadline_miss_counted(params):
+    eng = _engine(params, n_slots=1, scheduler="priority")
+    h = eng.submit(_prompt(), SamplingParams(max_new=2), deadline=0.0)
+    h.result()
+    assert eng.metrics()["deadline_misses"] == 1
+    eng2 = _engine(params, n_slots=1, scheduler="priority")
+    eng2.submit(_prompt(), SamplingParams(max_new=2), deadline=120.0).result()
+    assert eng2.metrics()["deadline_misses"] == 0
+
+
+def test_cancelled_requests_never_count_as_deadline_misses(params):
+    """A client-initiated cancel is not an SLO miss — and the answer must
+    not depend on whether the request was still queued or already decoding
+    when cancelled."""
+    eng = _engine(params, n_slots=1)
+    h_active = eng.submit(_prompt(5, seed=1), SamplingParams(max_new=6),
+                          deadline=0.0)
+    h_queued = eng.submit(_prompt(5, seed=2), SamplingParams(max_new=6),
+                          deadline=0.0)
+    eng.step()  # h_active admitted (deadline already blown); h_queued waits
+    h_queued.cancel()
+    h_active.cancel()
+    eng.drain()
+    m = eng.metrics()
+    assert m["cancelled"] == 2 and m["deadline_misses"] == 0
+
+
+def test_priority_ignored_by_fifo_policies(params):
+    """fcfs stays strictly arrival-ordered even when priorities are set —
+    urgency is a policy decision, not an engine override."""
+    eng = _engine(params, n_slots=1, scheduler="fcfs")
+    h_lo = eng.submit(_prompt(4, seed=1), SamplingParams(max_new=2),
+                      priority=0)
+    h_hi = eng.submit(_prompt(4, seed=2), SamplingParams(max_new=2),
+                      priority=9)
+    eng.drain()
+    assert h_lo.request.t_admit < h_hi.request.t_admit

@@ -9,7 +9,11 @@ copy-on-write clone (kernel pair + divergence isolation), the S-1 match cap
 leaf eviction under pool pressure (never a page with live readers), the
 prefill jitted-call reduction, namespaced ``cache/`` metrics, and the pool
 conservation invariant (free + live + scratch == n_pages) under random
-admit/advance/complete/evict churn (hypothesis property test).
+admit/advance/complete/evict churn (hypothesis property test) — now also
+under random MID-DECODE ``cancel()`` calls through the lifecycle API: a
+cancelled sharer decrefs (never zeroes) pages with live readers, the pool
+stays conserved at every step, and surviving sharers' token streams are
+bit-identical to an uncancelled baseline run.
 """
 
 import jax
@@ -388,6 +392,99 @@ def test_metrics_namespace_cache_keys(params):
     # slot backend namespaces too
     eng2 = ServeEngine(params, TINY, POLICY, n_slots=1, s_max=16, impl="jnp")
     assert eng2.metrics()["cache/backend"] == "slot"
+
+
+# -------------------------- cancellation under sharing (lifecycle API v1)
+
+
+def _assert_pool_conserved(cache):
+    """free + (distinct live block-table/index pages) + scratch == n_pages,
+    and no page is simultaneously free and mapped."""
+    table = {int(p) for s in range(cache.n_slots)
+             for p in cache.block_tables[s, : int(cache._alloc[s])]}
+    index = set()
+
+    def walk(node):
+        for ch in node.children.values():
+            index.add(ch.page)
+            walk(ch)
+    walk(cache._root)
+    live = (table | index) - {0}
+    assert len(cache._free) + len(live) + 1 == cache.n_pages
+    assert not live.intersection(cache._free)
+
+
+def _sharing_prompts():
+    """Four sharers of one 12-token template plus one cold prompt."""
+    rng = np.random.RandomState(11)
+    shared = rng.randint(1, TINY.vocab, size=12).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.randint(1, TINY.vocab, size=3 + i)]).astype(np.int32)
+        for i in range(4)]
+    prompts.append(rng.randint(1, TINY.vocab, size=10).astype(np.int32))
+    return prompts
+
+
+_CANCEL_BASELINE: dict[int, list] = {}
+
+
+def _uncancelled_baseline(params):
+    """Tokens of the churn workload run to completion with no cancels —
+    computed once; greedy decode on the prefix backend is bit-exact
+    regardless of sharing, eviction, or admission order."""
+    if not _CANCEL_BASELINE:
+        eng = ServeEngine(params, TINY, POLICY, n_slots=3, s_max=32,
+                          impl="jnp", prefill="chunked", prefill_chunk=4,
+                          cache="prefix", page_size=4)
+        out = eng.run([Request(rid=i, prompt=p.copy(), max_new=6)
+                       for i, p in enumerate(_sharing_prompts())])
+        _CANCEL_BASELINE.update(out)
+    return _CANCEL_BASELINE
+
+
+@settings(max_examples=5, deadline=None)
+@given(data=st.data())
+def test_mid_decode_cancellation_conserves_pool_and_sharers(data, params):
+    """Property: random mid-decode cancel() calls against a shared-prefix
+    stream (small pools included, so admission queues and LRU eviction
+    fires) keep the pool conserved after EVERY step and cancellation, never
+    perturb a surviving sharer's tokens, and leak nothing once drained."""
+    from repro.serve import SamplingParams
+
+    prompts = _sharing_prompts()
+    n_pages = data.draw(st.integers(14, 25), label="pages")
+    cancel_after = {
+        rid: data.draw(st.integers(1, 5), label=f"after{rid}")
+        for rid in set(data.draw(
+            st.lists(st.sampled_from(range(len(prompts))), min_size=0,
+                     max_size=3), label="cancel"))}
+    eng = ServeEngine(params, TINY, POLICY, n_slots=3, s_max=32, impl="jnp",
+                      prefill="chunked", prefill_chunk=4,
+                      cache="prefix", page_size=4, n_pages=n_pages)
+    handles = {i: eng.submit(p.copy(), SamplingParams(max_new=6), rid=i)
+               for i, p in enumerate(prompts)}
+    while True:
+        more = eng.step()
+        _assert_pool_conserved(eng.cache)
+        for rid, k in cancel_after.items():
+            h = handles[rid]
+            if not h.done and len(h.request.out or []) >= k:
+                h.cancel()
+                _assert_pool_conserved(eng.cache)
+        if not more:
+            break
+    baseline = _uncancelled_baseline(params)
+    for rid, h in handles.items():
+        if rid in cancel_after:
+            assert h.status == "cancelled"
+            assert len(h.request.out) >= cancel_after[rid]
+        else:
+            assert h.status == "done"
+            assert h.request.out == baseline[rid]  # survivors untouched
+    assert eng.metrics()["cancelled"] == len(cancel_after)
+    # drained: every page is either free or pinned by the warm index
+    assert eng.cache.pages_live() == eng.cache.index_pages()
+    _assert_pool_conserved(eng.cache)
 
 
 # ------------------------------------- pool conservation under random churn
