@@ -25,7 +25,11 @@ concurrent requests at 4-bit KV under an equal cache byte budget, and the
 prefix-sharing cache must decode the shared-prefix workload bit-identically
 to a cold paged run while cutting jitted prefill calls >=
 MIN_PREFIX_CALL_REDUCTION x and fresh page draws >=
-MIN_PREFIX_PAGE_REDUCTION x at equal cache bytes. The request-lifecycle
+MIN_PREFIX_PAGE_REDUCTION x at equal cache bytes. The fused decode
+attention rows (``attn_decode``, one per KV precision) must decode
+bit-identically to the gather-then-dense path through the engine's
+``fused_attn`` flag, hold the in-process fused-vs-unfused step speedup at
+8/4-bit KV, and carry the checked-in tuned block size. The request-lifecycle
 API (``sampling_serving`` rows, one per cache backend) must keep greedy
 decode bit-exact across the compat ``run()`` wrapper, the session API, and
 the dense-slot reference; seeded stochastic streams must reproduce
@@ -64,9 +68,11 @@ def _expected_perms() -> dict[str, set[str]]:
     }
 
 
-def check_lm_serving(out_dir: pathlib.Path) -> list[str]:
+def check_lm_serving(out_dir: pathlib.Path, tuned_dir: pathlib.Path,
+                     tol: float) -> list[str]:
     from benchmarks import lm_serving
     from repro import configs
+    from repro.kernels import tuning
 
     doc = _load(out_dir / "BENCH_lm_serving.json")
     rows = doc.get("rows", [])
@@ -195,6 +201,44 @@ def check_lm_serving(out_dir: pathlib.Path) -> list[str]:
                 errors.append(
                     f"lm_serving/{r['name']}: {r.get('pages_leaked')} pages "
                     f"still live after drain (cancellation leak)")
+
+    # 7. fused decode attention: every KV precision covered, engine tokens
+    # bit-exact with the fused flag, the in-process fused-vs-unfused step
+    # time holds the speedup claim at 8/4-bit KV, and the tuned dense-view
+    # block size matches the checked-in winner (tiles provenance + the
+    # tuned <= static * tol invariant, same as fig4/tab1 rows)
+    attn = {r["policy"]: r for r in rows if r.get("kind") == "attn_decode"}
+    missing_attn = set(lm_serving.PAGED_POLICIES) - set(attn)
+    if missing_attn:
+        errors.append(
+            f"lm_serving: missing attn_decode rows: {sorted(missing_attn)}")
+    attn_cache = tuning.TileCache("paged_attn",
+                                  tuned_dir / "tiles_paged_attn.json")
+    for pol, r in sorted(attn.items()):
+        if not r.get("tokens_match"):
+            errors.append(
+                f"lm_serving/{r['name']}: fused decode attention produced "
+                f"different tokens than the gather-then-dense path")
+        if r["kv_bits"] in (8, 4) and (
+                r["step_speedup"] < lm_serving.MIN_FUSED_STEP_SPEEDUP):
+            errors.append(
+                f"lm_serving/{r['name']}: fused decode step speedup "
+                f"{r['step_speedup']}x < "
+                f"{lm_serving.MIN_FUSED_STEP_SPEEDUP}x at "
+                f"{r['kv_bits']}-bit KV ({r['us_fused']}us fused vs "
+                f"{r['us_unfused']}us gather-then-dense)")
+        hit = attn_cache.get(r["perm"], r["shape"])
+        baseline = ({k: int(hit[k]) for k in r["tiles"]} if hit
+                    else {k: tuning.STATIC_DEFAULTS["paged_attn"][k]
+                          for k in r["tiles"]})
+        if {k: int(v) for k, v in r["tiles"].items()} != baseline:
+            errors.append(
+                f"lm_serving/{r['name']}: tiles {r['tiles']} != baseline "
+                f"{baseline} ({'tuned cache' if hit else 'static default'})")
+        if r["us_tuned"] > r["us_static"] * tol:
+            errors.append(
+                f"lm_serving/{r['name']}: tuned bs slower than static: "
+                f"{r['us_tuned']}us > {r['us_static']}us * {tol}")
     return errors
 
 
@@ -203,7 +247,7 @@ def check_bench(bench: str, out_dir: pathlib.Path, tuned_dir: pathlib.Path,
     from repro.kernels import tuning
 
     if bench == "lm_serving":
-        return check_lm_serving(out_dir)
+        return check_lm_serving(out_dir, tuned_dir, tol)
 
     doc = _load(out_dir / f"BENCH_{bench}.json")
     rows = {r["perm"]: r for r in doc.get("rows", [])}

@@ -29,6 +29,12 @@ run-to-run, different seeds must diverge per slot, and a mid-run
 ``cancel()`` must free >= 1 page on the paged backends and leak none after
 the drain.
 
+Part 6 (fused decode attention): the fused paged-attention kernel path
+(``kernels/paged_attn.py``, ``fused_attn=True``) vs the gather-then-dense
+default — engine-level greedy bit-exactness on the paged backend, one
+decode-attention step timed fused vs unfused (interleaved), and the tuned
+dense-view block size, per KV precision.
+
 Rows land in ``BENCH_lm_serving.json`` so ``check_bench.py`` gates the
 byte-accounting invariants, the prefill-speedup claim (stepwise >= 5x the
 chunked call count), paged bit-exactness, the paged capacity win
@@ -486,6 +492,158 @@ def run_sampling_serving() -> list[dict]:
     return rows
 
 
+#: Fused decode-attention comparison shape — amplified (long context, wide
+#: heads) so the page-walking cost, not trace overhead, dominates; the
+#: engine-level bit-exactness probe reuses the smoke serving shape.
+ATTN_DECODE_B = 4
+ATTN_DECODE_S = 512
+ATTN_DECODE_HQ = 8
+ATTN_DECODE_HKV = 2
+ATTN_DECODE_D = 64
+ATTN_DECODE_MAX_NEW = 4
+#: check_bench gates fused/unfused step time >= this at 8/4-bit KV. Both
+#: sides are measured in-process with interleaved sampling (tuning
+#: .time_pair), so the ratio is runner-independent; measured ~1.5-2.5x on
+#: the jnp backend, so 1.1 leaves honest margin for timer noise.
+MIN_FUSED_STEP_SPEEDUP = 1.1
+
+
+def run_attn_decode() -> list[dict]:
+    """Fused paged-attention decode (kernels/paged_attn.py) vs the
+    gather-then-dense path, per KV precision.
+
+    Three claims per row (check_bench kind ``attn_decode``):
+      * tokens_match — a greedy serving run on the paged backend with
+        ``fused_attn=True`` decodes the exact tokens of the default path;
+      * step_speedup — one decode-attention step at the amplified shape,
+        fused (block-table walk + in-kernel dequant) vs gather-then-dense
+        (paged_gather -> kv_dequantize -> dense softmax), interleaved
+        timing, gated >= MIN_FUSED_STEP_SPEEDUP at 8/4-bit KV;
+      * tile provenance — the dense-view block size ``bs`` autotunes
+        through tuning op ``paged_attn`` (winners in
+        ``benchmarks/tuned/tiles_paged_attn.json``) and the row's tiles
+        must match the checked-in winner, with us_tuned <= us_static * tol
+        like every tuned op.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, tuning
+    from repro.models import attention as A
+    from repro.models import model as M
+    from repro.serve import Request, ServeEngine
+
+    B, S = ATTN_DECODE_B, ATTN_DECODE_S
+    HQ, HKV, D = ATTN_DECODE_HQ, ATTN_DECODE_HKV, ATTN_DECODE_D
+    ps = PAGED_PAGE_SIZE
+    nb = S // ps
+    cfg = configs.reduced(configs.get_arch(SERVE_ARCH))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab,
+                           size=PAGED_PROMPT_LEN).astype(np.int32)
+               for _ in range(4)]
+    rows = []
+    for pol_name in PAGED_POLICIES:
+        policy = get_policy(pol_name)
+        bits = policy.kv_cache_bits
+
+        ks = jax.random.split(jax.random.key(3), 3)
+        q = jax.random.normal(ks[0], (B, HQ, D), jnp.float32)
+        kf = jax.random.normal(ks[1], (B, S, HKV, D), jnp.bfloat16)
+        vf = jax.random.normal(ks[2], (B, S, HKV, D), jnp.bfloat16)
+        pos = jnp.full((B,), S - 1, jnp.int32)
+        kq, k_s = A.kv_quantize(kf, bits)
+        vq, v_s = A.kv_quantize(vf, bits)
+
+        # dense-view fused call, block size as the tunable (tuning op
+        # "paged_attn"; the static default is always a candidate)
+        def make_call(tiles, bits=bits, q=q, kq=kq, k_s=k_s, vq=vq, v_s=v_s,
+                      pos=pos):
+            bs = int(tiles["bs"])
+            f = jax.jit(lambda *a: ops.paged_attn(*a, bits=bits, impl="jnp",
+                                                  bs=bs))
+            args = (q, kq, k_s, vq, v_s, pos)
+            return lambda: f(*args)
+
+        perm = tuning.perm_key(w_bits=bits)
+        shape = tuning.shape_key(S, HQ, D)
+        tiles, us_static, us_tuned = tuning.tune_and_compare(
+            "paged_attn", perm=perm, shape=shape, make_call=make_call,
+            cand=tuning.candidates("paged_attn", M=S), iters=3, warmup=1)
+
+        # fused vs gather-then-dense on the PAGED layout (pool + identity
+        # block table at the serving page size)
+        rs = lambda a: (None if a is None  # noqa: E731
+                        else a.reshape(B * nb, ps, *a.shape[2:]))
+        kqp, ksp, vqp, vsp = rs(kq), rs(k_s), rs(vq), rs(v_s)
+        bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+
+        @jax.jit
+        def fused_step(q, kqp, ksp, vqp, vsp, pos, bt, bits=bits):
+            return ops.paged_attn(q, kqp, ksp, vqp, vsp, pos, bits=bits,
+                                  block_table=bt, impl="jnp")
+
+        @jax.jit
+        def unfused_step(q, kqp, ksp, vqp, vsp, pos, bt, bits=bits):
+            kd = ops.paged_gather(kqp, bt, impl="jnp")
+            vd = ops.paged_gather(vqp, bt, impl="jnp")
+            ksd = ops.paged_gather(ksp, bt, impl="jnp") if ksp is not None else None
+            vsd = ops.paged_gather(vsp, bt, impl="jnp") if vsp is not None else None
+            k = A.kv_dequantize(kd, ksd, bits).astype(jnp.float32)
+            v = A.kv_dequantize(vd, vsd, bits).astype(jnp.float32)
+            g = HQ // HKV
+            kr, vr = jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
+            s = jnp.einsum("bhd,bkhd->bhk", q, kr) / (D**0.5)
+            valid = jnp.arange(S)[None, None, :] <= pos[:, None, None]
+            p = jax.nn.softmax(jnp.where(valid, s, A.BIG_NEG), axis=-1)
+            return jnp.einsum("bhk,bkhd->bhd", p, vr)
+
+        args = (q, kqp, ksp, vqp, vsp, pos, bt)
+        us_fused, us_unfused = tuning.time_pair(
+            lambda: fused_step(*args), lambda: unfused_step(*args),
+            iters=5, warmup=2)
+
+        # engine-level bit-exactness: fused flag on the paged backend
+        params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+
+        def drive(fused, policy=policy, params=params):
+            eng = ServeEngine(
+                params, cfg, policy, n_slots=2, s_max=PAGED_S_MAX,
+                impl="jnp", prefill="chunked", prefill_chunk=SERVE_CHUNK,
+                cache="paged", page_size=PAGED_PAGE_SIZE,
+                fused_attn=fused)
+            return eng.run([Request(rid=i, prompt=p.copy(),
+                                    max_new=ATTN_DECODE_MAX_NEW)
+                            for i, p in enumerate(prompts)])
+
+        tokens_match = drive(False) == drive(True)
+        row = {
+            "name": f"lm_attn_decode_{pol_name}",
+            "kind": "attn_decode",
+            "arch": cfg.name,
+            "policy": pol_name,
+            "kv_bits": bits or 16,
+            "op": "paged_attn",
+            "perm": perm,
+            "shape": shape,
+            "tiles": {"bs": int(tiles["bs"])},
+            "us_static": round(us_static, 2),
+            "us_tuned": round(us_tuned, 2),
+            "page_size": ps,
+            "seq": S,
+            "us_fused": round(us_fused, 2),
+            "us_unfused": round(us_unfused, 2),
+            "step_speedup": round(us_unfused / us_fused, 3),
+            "tokens_match": tokens_match,
+        }
+        rows.append(row)
+        csv_row(f"lm_attn_decode_{pol_name}", us_fused,
+                f"speedup={row['step_speedup']}x;bs={row['tiles']['bs']};"
+                f"tokens_match={tokens_match}")
+    return rows
+
+
 def run_kvpage_tune() -> list[dict]:
     """Autotune the paged cache's page size like a kernel tile — one winner
     per (kv_cache_bits, s_max) cell, not one global default.
@@ -562,6 +720,7 @@ def run():
     rows += run_paged_serving()
     rows += run_prefix_serving()
     rows += run_sampling_serving()
+    rows += run_attn_decode()
     rows += run_kvpage_tune()
     emit_json("lm_serving", rows)
 

@@ -70,6 +70,11 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed; request i uses seed + i")
+    ap.add_argument("--fused-attn", action="store_true",
+                    help="decode attention via the fused paged-attention "
+                         "kernel (in-kernel KV dequant) instead of "
+                         "gather-then-dense; tokens are bit-identical "
+                         "either way (see docs/kernel-authoring.md)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -82,7 +87,8 @@ def main():
     eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=64,
                       impl=args.impl, scheduler=args.scheduler,
                       prefill=args.prefill, prefill_chunk=args.chunk,
-                      cache=args.cache, page_size=args.page_size)
+                      cache=args.cache, page_size=args.page_size,
+                      fused_attn=args.fused_attn)
     rng = np.random.RandomState(0)
     system = rng.randint(1, cfg.vocab, size=args.shared_prefix).astype(np.int32)
     prompts = [np.concatenate(

@@ -78,6 +78,11 @@ DISPATCH_COUNTS: collections.Counter = collections.Counter()
 
 IMPLS = ("pallas", "jnp")
 
+#: KV-cache storage widths the quantizer emits (models.attention.kv_quantize):
+#: bf16 passthrough, int8, packed int4. The fused decode-attention ops key
+#: their w_bits axis on this set.
+KV_BITS = (None, 8, 4)
+
 
 def register(
     op: str,
@@ -180,6 +185,13 @@ def validate_coverage() -> None:
         for op in ("paged_gather", "paged_scatter", "paged_copy"):
             if not coverage(op, impl):
                 missing.append(f"{op}@{impl}")
+        # fused decode attention is keyed on the KV storage width (w_bits):
+        # bf16 (None) plus every packed width the cache quantizer emits
+        for op in ("paged_attn", "paged_mla_attn"):
+            have_kv = {c[1] for c in coverage(op, impl)}
+            for b in KV_BITS:
+                if b not in have_kv:
+                    missing.append(f"{op}[kv={b}]@{impl}")
     if missing:
         raise RuntimeError(
             f"kernel matrix has {len(missing)} unregistered cells: {missing}"
@@ -303,6 +315,39 @@ def _register_library() -> None:
              name="paged_copy")
     register("paged_copy", impl="jnp", fn=paged_copy_ref,
              name="paged_copy_ref")
+    # fused decode attention: block-table walk + in-kernel dequant, one cell
+    # per KV storage width (bf16 / int8 / packed int4). The tunable knob is
+    # the dense-view block size (tuning op "paged_attn"); paged callers
+    # inherit the pool's page size instead.
+    from repro.kernels.paged_attn import (
+        paged_attn_pallas,
+        paged_attn_ref,
+        paged_mla_attn_pallas,
+        paged_mla_attn_ref,
+    )
+
+    for kv_bits in KV_BITS:
+        tag = "bf16" if kv_bits is None else f"kv{kv_bits}"
+        register(
+            "paged_attn", w_bits=kv_bits, impl="pallas",
+            fn=functools.partial(paged_attn_pallas, bits=kv_bits),
+            name=f"paged_attn_{tag}", tunable=("bs",),
+        )
+        register(
+            "paged_attn", w_bits=kv_bits, impl="jnp",
+            fn=functools.partial(paged_attn_ref, bits=kv_bits),
+            name=f"paged_attn_{tag}_ref",
+        )
+        register(
+            "paged_mla_attn", w_bits=kv_bits, impl="pallas",
+            fn=functools.partial(paged_mla_attn_pallas, bits=kv_bits),
+            name=f"paged_mla_attn_{tag}", tunable=("bs",),
+        )
+        register(
+            "paged_mla_attn", w_bits=kv_bits, impl="jnp",
+            fn=functools.partial(paged_mla_attn_ref, bits=kv_bits),
+            name=f"paged_mla_attn_{tag}_ref",
+        )
 
 
 _register_library()

@@ -234,6 +234,95 @@ def paged_copy(
     return entry.fn(pool, src, dst, interpret=_interpret())
 
 
+def _dense_as_pool(bufs, B: int, S: int, bs: int):
+    """View dense (B, S, ...) cache stripes as a (B*S/bs, bs, ...) page pool
+    plus the identity block table — a free reshape (rows stay contiguous), so
+    the slot backend shares the paged kernel rather than growing a twin."""
+    nb = S // bs
+    pooled = tuple(
+        None if a is None else a.reshape(B * nb, bs, *a.shape[2:]) for a in bufs
+    )
+    bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    return pooled, bt
+
+
+def _snap_divisor(bs: int, S: int) -> int:
+    return max(d for d in range(1, min(bs, S) + 1) if S % d == 0)
+
+
+def paged_attn(
+    q: jax.Array,  # (B, Hq, D) one query token per slot
+    k: jax.Array,  # pool (P, ps, Hkv, D/r) or dense (B, S, Hkv, D/r)
+    k_s: Optional[jax.Array],  # matching (..., Hkv) scales; None when bf16
+    v: jax.Array,
+    v_s: Optional[jax.Array],
+    pos: jax.Array,  # (B,) int32 last valid cache row per slot
+    *,
+    bits: Optional[int],
+    block_table: Optional[jax.Array] = None,  # (B, NB) int32; None = dense
+    window: Optional[int] = None,
+    impl: Impl = "auto",
+    bs: Optional[int] = None,
+) -> jax.Array:
+    """Fused GQA decode attention over quantized KV pages (in-kernel dequant).
+
+    With ``block_table`` the cache is a page pool and the pool's page size is
+    the block size. Without it the cache is a dense slot layout: the stripes
+    are viewed as a pool with an identity block table, and the block size
+    ``bs`` resolves through the autotuner cache
+    (benchmarks/tuned/tiles_paged_attn.json; snapped to a divisor of S).
+    Returns (B, Hq, D) f32 — bit-exact with the registered jnp twin.
+    """
+    entry = dispatch.lookup("paged_attn", w_bits=bits, impl=impl)
+    if block_table is None:
+        B, S = k.shape[0], k.shape[1]
+        t = tuning.resolve_tiles(
+            "paged_attn", perm=tuning.perm_key(w_bits=bits),
+            shape=tuning.shape_key(S, q.shape[1], q.shape[2]),
+            overrides={"bs": bs},
+        )
+        (k, k_s, v, v_s), block_table = _dense_as_pool(
+            (k, k_s, v, v_s), B, S, _snap_divisor(t["bs"], S))
+    if entry.key.impl == "jnp":
+        return entry.fn(q, k, k_s, v, v_s, pos, block_table, window=window)
+    return entry.fn(q, k, k_s, v, v_s, pos, block_table, window=window,
+                    interpret=_interpret())
+
+
+def paged_mla_attn(
+    q_lat: jax.Array,  # (B, H, C) absorbed query (q_nope . W_uk)
+    q_rope: jax.Array,  # (B, H, dr) rotary query
+    c: jax.Array,  # latent pages, pool (P, ps, 1, C/r) or dense (B, S, 1, C/r)
+    c_s: Optional[jax.Array],  # matching (..., 1) scales; None when bf16
+    r: jax.Array,  # shared rope-key rows, same layout as c with dr tail
+    pos: jax.Array,  # (B,) int32
+    *,
+    bits: Optional[int],
+    scale: float,
+    block_table: Optional[jax.Array] = None,
+    impl: Impl = "auto",
+    bs: Optional[int] = None,
+) -> jax.Array:
+    """Fused absorbed-MLA decode attention; latent pages stay compressed in
+    the pool. Returns the latent context (B, H, C) f32 — the caller applies
+    W_uv. Block-size resolution mirrors :func:`paged_attn` (same tuning op:
+    the tunable axis is the dense-view block size either way)."""
+    entry = dispatch.lookup("paged_mla_attn", w_bits=bits, impl=impl)
+    if block_table is None:
+        B, S = c.shape[0], c.shape[1]
+        t = tuning.resolve_tiles(
+            "paged_attn", perm=tuning.perm_key(w_bits=bits),
+            shape=tuning.shape_key(S, q_lat.shape[1], q_lat.shape[2]),
+            overrides={"bs": bs},
+        )
+        (c, c_s, r), block_table = _dense_as_pool(
+            (c, c_s, r), B, S, _snap_divisor(t["bs"], S))
+    if entry.key.impl == "jnp":
+        return entry.fn(q_lat, q_rope, c, c_s, r, pos, block_table, scale=scale)
+    return entry.fn(q_lat, q_rope, c, c_s, r, pos, block_table, scale=scale,
+                    interpret=_interpret())
+
+
 # ------------------------------------------------------- quantize-and-pack IO
 
 

@@ -46,6 +46,11 @@ STATIC_DEFAULTS: dict[str, dict[str, int]] = {
     # it resolves through the same cache as the matmul blocks
     # (serve.cache.PagedKVCache consults resolve_tiles("kvpage", ...)).
     "kvpage": {"ps": 16},
+    # fused decode attention's dense-view block size: the slot backend
+    # reshapes its (B, S_max, ...) stripes into a (B*S_max/bs, bs, ...)
+    # page-pool view, so bs plays exactly the page-size role — and the
+    # default matches kvpage's ps so slot/paged outputs stay bit-identical.
+    "paged_attn": {"bs": 16},
 }
 
 #: Candidate menus per tunable axis. ops.py clamps to the (padded) problem
@@ -204,6 +209,11 @@ def candidates(op: str, *, M: int, N: Optional[int] = None,
         # M is the cache's s_max: pages larger than the whole sequence
         # budget only add dead tail capacity
         grid = [{"ps": ps} for ps in _PS_MENU if ps <= M]
+    elif op == "paged_attn":
+        # M is the dense cache's S_max; ops.paged_attn snaps bs to a divisor
+        # of S_max (the reshape to a page-pool view must tile exactly)
+        grid = [{"bs": bs} for bs in _PS_MENU + (128,)
+                if bs <= M and M % bs == 0]
     elif op == "conv2d":
         # M is the ofmap height here; ops.conv2d snaps bh to a divisor of H,
         # so non-dividing candidates would silently duplicate smaller ones.

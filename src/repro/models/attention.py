@@ -341,6 +341,7 @@ def attn_apply(
     kv_override: Optional[tuple[jax.Array, jax.Array]] = None,  # cross-attn
     attend_cached: bool = False,
     block_table: Optional[jax.Array] = None,
+    fused: bool = False,
 ):
     """Returns (y, new_cache). Prefill/train: cache None -> flash path.
     Decode: cache given, S == new tokens (typically 1).
@@ -356,7 +357,13 @@ def attn_apply(
     rows the dense path stores — positions past a slot's write frontier are
     causally masked to exactly-zero softmax weight, so whatever a recycled
     page still holds can never reach the output and paged decode stays
-    bit-identical to the dense-slot path."""
+    bit-identical to the dense-slot path.
+
+    ``fused`` routes single-token causal decode through the fused
+    paged-attention kernel (kernels/paged_attn.py): the block table is walked
+    inside the kernel and quantized pages are dequantized in VMEM, so the
+    gather-to-dense materialization below (``cache_read``) never runs. Other
+    shapes (chunked prefill, cross-attn, non-causal) fall back unchanged."""
     B, S, _ = x.shape
     lp_qkv = policy.of("attn_qkv")
     lp_out = policy.of("attn_out")
@@ -384,14 +391,27 @@ def attn_apply(
             "whole-sequence prefill over a paged cache is unsupported — "
             "prefill through model.prefill_into_pages (gather-row path) or "
             "decode token-by-token")
+    fused_decode = (fused and cache is not None and kv_override is None
+                    and S == 1 and causal and not prefill)
     if cache is not None and kv_override is None:
         new_cache = cache_update(cache, k, v, cache_pos, bits,
                                  block_table=block_table, impl=impl)
-        if not prefill:
+        if not prefill and not fused_decode:
             k, v = cache_read(new_cache, bits, block_table=block_table,
                               impl=impl)
 
-    if cache is None or prefill:
+    if fused_decode:
+        # fused path: attend straight over the stored (quantized) cache —
+        # the kernel walks the block table and dequantizes per page in VMEM
+        pos_b = jnp.broadcast_to(jnp.atleast_1d(cache_pos), (B,))
+        y = ops.paged_attn(
+            q[:, 0].astype(jnp.float32),
+            new_cache["k"], new_cache.get("k_s"),
+            new_cache["v"], new_cache.get("v_s"),
+            pos_b, bits=bits, block_table=block_table,
+            window=cfg.window, impl=impl,
+        )[:, None].astype(x.dtype)
+    elif cache is None or prefill:
         # full-sequence: flash path. Prefill (cache_pos == 0) attends over the
         # freshly computed k/v while the quantized cache write happens above.
         y = flash_attention(q, k, v, causal=causal, window=cfg.window)
@@ -479,13 +499,18 @@ def mla_apply(
     cache_pos: Optional[jax.Array] = None,
     attend_cached: bool = False,
     block_table: Optional[jax.Array] = None,
+    fused: bool = False,
 ):
     """MLA. Train/prefill: unabsorbed full-head attention. Decode: absorbed
     path over the latent cache (c_kv, k_rope) — the MLA memory win.
     ``attend_cached`` forces the absorbed cache path even when S > 1
     (chunked prefill; see attn_apply). ``block_table`` selects the paged
     latent-cache layout (see attn_apply): c/r pool pages are gathered into
-    logical rows before the absorbed score, scattered on write."""
+    logical rows before the absorbed score, scattered on write. ``fused``
+    routes single-token decode through the fused kernel
+    (kernels/paged_attn.py): latent pages stay compressed in the pool, the
+    kernel scores and accumulates in latent space, and W_uv is applied to
+    the kernel's latent context afterwards — no gather, no per-head K/V."""
     from repro.models.common import rms_norm
 
     B, S, _ = x.shape
@@ -533,6 +558,18 @@ def mla_apply(
         k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, cfg.d_rope))], axis=-1)
         qf = jnp.concatenate([q_nope, q_rope], axis=-1)
         y = flash_attention(qf, k, v, causal=True)
+    elif fused and S == 1:
+        wkv_b = _mla_wkv_b_dense(params, cfg, lp).reshape(H, cfg.d_nope + cfg.d_v, cfg.kv_lora)
+        w_uk, w_uv = wkv_b[:, : cfg.d_nope, :], wkv_b[:, cfg.d_nope :, :]
+        q_lat = jnp.einsum("bhd,hdc->bhc", q_nope[:, 0].astype(jnp.float32), w_uk)
+        pos_b = jnp.broadcast_to(jnp.atleast_1d(cache_pos), (B,))
+        ctx = ops.paged_mla_attn(
+            q_lat, q_rope[:, 0].astype(jnp.float32),
+            new_cache["c"], new_cache.get("c_s"), new_cache["r"], pos_b,
+            bits=bits, scale=1.0 / ((cfg.d_nope + cfg.d_rope) ** 0.5),
+            block_table=block_table, impl=impl,
+        )  # (B, H, kv_lora) latent context, compressed end to end
+        y = jnp.einsum("bhc,hdc->bhd", ctx, w_uv)[:, None].astype(x.dtype)
     else:
         c_buf, c_s = new_cache["c"], new_cache.get("c_s")
         r_all = new_cache["r"]  # (B, S_max, 1, d_rope) bf16

@@ -178,7 +178,7 @@ def _block_init(key, cfg: ArchConfig, policy, mode, dtype, *, kind: str) -> dict
 
 def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
                  cache=None, cache_pos=None, cross_kv=None, causal=True,
-                 attend_cached=False, block_tables=None):
+                 attend_cached=False, block_tables=None, fused_attn=False):
     """Returns (x_out, new_cache, aux)."""
     _, nfn = _norm_fns(cfg)
     aux = jnp.zeros((), jnp.float32)
@@ -189,14 +189,16 @@ def _block_apply(params, x, pos, cfg: ArchConfig, policy, *, kind, mode, impl,
                                      mode=mode, impl=impl, cache=cache,
                                      cache_pos=cache_pos,
                                      attend_cached=attend_cached,
-                                     block_table=block_tables)
+                                     block_table=block_tables,
+                                     fused=fused_attn)
         else:
             sc = None if cache is None else cache.get("self")
             a, sc_new = attn_apply(params["attn"], h, pos, cfg.attn_cfg, policy,
                                    mode=mode, impl=impl, causal=causal,
                                    cache=sc, cache_pos=cache_pos,
                                    attend_cached=attend_cached,
-                                   block_table=block_tables)
+                                   block_table=block_tables,
+                                   fused=fused_attn)
             new_cache = cache if cache is None else dict(cache, self=sc_new)
         x = x + a
         if kind == "dec":
@@ -321,7 +323,8 @@ def _remat_wrap(body, remat_policy: str):
 def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
                caches=None, cache_pos=None, cross_kv=None, causal=True,
                remat: bool = True, remat_policy: str = "full",
-               attend_cached: bool = False, block_tables=None):
+               attend_cached: bool = False, block_tables=None,
+               fused_attn: bool = False):
     """Scan the grouped block stacks. caches: list matching groups (stacked
     leading dim) or None. Returns (x, new_caches, aux_sum).
 
@@ -346,7 +349,8 @@ def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
             h2, nc, aux = _block_apply(
                 bp, h, pos, cfg, policy, kind=kind, mode=mode, impl=impl,
                 cache=bc, cache_pos=cache_pos, cross_kv=ckv, causal=causal,
-                attend_cached=attend_cached, block_tables=block_tables)
+                attend_cached=attend_cached, block_tables=block_tables,
+                fused_attn=fused_attn)
             return (h2.astype(h.dtype), auxc + aux), nc
 
         body_fn = (_remat_wrap(body, remat_policy)
@@ -371,7 +375,7 @@ def _run_stack(params, x, pos, cfg: ArchConfig, policy, *, mode, impl,
                 x, sa_new, _ = _block_apply(
                     shared, x, pos, cfg, policy, kind="dense", mode=mode,
                     impl=impl, cache=sa_cache, cache_pos=cache_pos,
-                    attend_cached=attend_cached)
+                    attend_cached=attend_cached, fused_attn=fused_attn)
                 if sa_new is not None and g_cache is not None:
                     new_g_cache_chunks.append(("shared", sub, sa_new))
                 off += n_sub
@@ -554,7 +558,8 @@ def prefill_step(params: dict, batch: dict, caches: list, cfg: ArchConfig,
 def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
                 cfg: ArchConfig, policy: PrecisionPolicy, *,
                 impl: ops.Impl = "auto",
-                block_tables: Optional[jax.Array] = None):
+                block_tables: Optional[jax.Array] = None,
+                fused_attn: bool = False):
     """One serving step: tokens (B, S_new=1), pos = cache write position —
     scalar int32 (lockstep batch) or (B,) int32 (continuous batching, one
     offset per slot). Returns (logits (B, S_new, V), new_caches).
@@ -563,7 +568,13 @@ def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
     layout (see init_paged_cache; the page size is each pool leaf's axis 2):
     attention gathers each slot's pages into the same logical rows the
     dense layout stores and scatters the new token's K/V through the table
-    — decoded tokens are bit-identical to the dense-slot path."""
+    — decoded tokens are bit-identical to the dense-slot path.
+
+    ``fused_attn`` routes attention through the fused paged-attention
+    kernel (kernels/paged_attn.py): no gather-to-dense materialization;
+    quantized KV pages are dequantized inside the kernel. Works with dense
+    AND paged caches (the dense layout is viewed as pages); numerics match
+    the default path to ulp-level (page-blocked softmax reduction order)."""
     _, nfn = _norm_fns(cfg)
     mode = "serve"
     x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
@@ -574,7 +585,8 @@ def decode_step(params: dict, tokens: jax.Array, pos: jax.Array, caches: list,
         pos_ids = jnp.broadcast_to(pos_ids[None], (3, B, S))
     x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
                                   impl=impl, caches=caches, cache_pos=pos,
-                                  remat=False, block_tables=block_tables)
+                                  remat=False, block_tables=block_tables,
+                                  fused_attn=fused_attn)
     x = nfn(params["final_norm"], x)
     logits = linear_apply(params["head"], x, policy.of("head"), mode=mode, impl=impl)
     return logits, new_caches

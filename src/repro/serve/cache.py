@@ -4,16 +4,27 @@ Both own the model cache pytree, the per-slot write positions the decode
 step consumes, slot acquisition/recycling, and capacity checks — the single
 seam between the engine/prefill/scheduler layers and cache internals.
 
-:class:`SlotCache` is the PR-2 layout: every slot reserves a contiguous
+The manager-surface contract — the verbs, their request-lifecycle order,
+and which backends no-op which — is tabulated in ``docs/architecture.md``
+("Cache managers"); keep that table and this module in sync (the docs CI
+job checks the file pointers, a human must check the semantics).
+
+:class:`SlotCache` is the dense layout: every slot reserves a contiguous
 ``s_max`` stripe, so a short prompt wastes the whole tail of its stripe.
 
-:class:`PagedKVCache` is the paged layout (this PR's tentpole): one global
+:class:`PagedKVCache` is the paged layout: one global
 pool of fixed-size token pages (``models.model.init_paged_cache``) plus a
 per-slot block table mapping logical block -> physical page. Capacity is a
 PAGE budget: a request holds only the pages its tokens actually occupy
 (rounded up to the page size), so effective concurrency at a fixed byte
 budget scales with both prompt-length slack and ``kv_cache_bits`` — the
-paper's footprint argument applied to serving. Page 0 is a reserved scratch
+paper's footprint argument applied to serving. Pages store K/V at the
+policy's QUANTIZED width end-to-end: decode either gathers them to logical
+rows and dequantizes (the default read path) or hands the pool + block
+tables straight to the fused decode-attention kernel
+(``kernels/paged_attn.py``, engine flag ``fused_attn=True``), which
+dequantizes in-kernel — the manager surface is identical either way.
+Page 0 is a reserved scratch
 page: unallocated block-table entries point at it, so transient writes from
 inactive slots (the stepwise-prefill idle lanes) land in trash instead of
 another request's pages.

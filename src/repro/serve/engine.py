@@ -133,8 +133,10 @@ class ServeEngine:
                  prefill: str = "auto", prefill_chunk: int = 16,
                  cache: Union[str, SlotCache, PagedKVCache, None] = "slot",
                  page_size: Optional[int] = None,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 fused_attn: bool = False):
         self.params, self.cfg, self.policy = params, cfg, policy
+        self.fused_attn = fused_attn
         # fail at construction, not mid-decode, if the policy needs a kernel
         # cell outside the registered 27-permutation library
         dispatch.ensure_policy_supported(policy)
@@ -159,7 +161,8 @@ class ServeEngine:
 
         def decode_and_sample(p, tok, pos, caches, samp, bt=None):
             logits, new_caches = M.decode_step(
-                p, tok, pos, caches, cfg, policy, impl=impl, block_tables=bt)
+                p, tok, pos, caches, cfg, policy, impl=impl, block_tables=bt,
+                fused_attn=fused_attn)
             nxt = M.sample_tokens(logits[:, -1], *samp)
             return nxt, logits, new_caches
 

@@ -46,6 +46,13 @@ still reads keeps its bits and its residency; only last-reader pages are
 zeroed and freed. The engine-level churn test in tests/test_prefix.py cancels
 sharers mid-decode at random and holds the pool conservation invariant and
 the survivors' token streams fixed.
+
+This backend overrides only the admission verbs (``can_admit`` /
+``admission_cost`` / ``acquire``) and the post-prefill ``commit``; the
+write-path verbs (``prepare`` / ``advance`` / ``release``) are inherited
+from :class:`~repro.serve.cache.PagedKVCache` unchanged — sharing is
+entirely an admission-time concern. The verb contract is tabulated in
+``docs/architecture.md`` ("Cache managers").
 """
 
 from __future__ import annotations

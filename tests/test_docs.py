@@ -1,0 +1,143 @@
+"""Docs-vs-tree consistency (fast tier).
+
+The docs pages promise they cannot drift from the code; this module is that
+promise. It checks that every file path cited in ``docs/*.md`` and
+``README.md`` resolves against the real tree, that cited pytest node ids
+name real test functions, that relative markdown links resolve, that python
+code fences at least compile, and that the marker-delimited op tables in
+``docs/kernel-authoring.md`` match the live kernel registry and the
+autotuner's static defaults *bidirectionally* — an op added to the code
+without a docs row fails just like a docs row for a deleted op.
+"""
+
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+# tokens that look like repo paths: at least one '/', a known suffix, no
+# glob/placeholder characters
+_PATH_RE = re.compile(
+    r"^[\w./-]+/[\w./-]+\.(?:py|md|json|yml|yaml|toml|txt)(?:::\w+)?$")
+# roots a doc-cited relative path may be anchored at
+_ANCHORS = ("", "src/repro/", "src/")
+# generated artifacts legitimately cited before they exist
+_GENERATED = ("benchmarks/out/",)
+
+
+def _code_spans(text):
+    """Inline ``code`` spans plus the contents of code fences."""
+    fences = re.findall(r"```[^\n]*\n(.*?)```", text, flags=re.S)
+    spans = re.findall(r"`([^`\n]+)`", re.sub(r"```.*?```", "", text, flags=re.S))
+    return spans, fences
+
+
+def _resolve(token):
+    path, _, func = token.partition("::")
+    for anchor in _ANCHORS:
+        cand = REPO / anchor / path
+        if cand.is_file():
+            return cand, func
+    return None, func
+
+
+def _cited_paths(text):
+    spans, fences = _code_spans(text)
+    toks = set(spans)
+    for fence in fences:
+        toks.update(t for t in re.split(r"[\s(),]+", fence))
+    return sorted(t for t in toks
+                  if _PATH_RE.match(t) and not t.startswith(_GENERATED))
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_cited_paths_exist(doc):
+    text = doc.read_text()
+    bad = []
+    for tok in _cited_paths(text):
+        found, func = _resolve(tok)
+        if found is None:
+            bad.append(tok)
+        elif func and f"def {func}" not in found.read_text():
+            bad.append(f"{tok} (no such test function)")
+    assert not bad, f"{doc.name} cites paths missing from the tree: {bad}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_markdown_links_resolve(doc):
+    text = doc.read_text()
+    bad = []
+    for target in re.findall(r"\[[^\]]*\]\(([^)#\s]+)", text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if not (doc.parent / target).resolve().exists():
+            bad.append(target)
+    assert not bad, f"{doc.name} has dangling relative links: {bad}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_python_fences_compile(doc):
+    fences = re.findall(r"```python\n(.*?)```", doc.read_text(), flags=re.S)
+    for i, src in enumerate(fences):
+        compile(src, f"{doc.name}[fence {i}]", "exec")
+
+
+# ------------------------------------------------ marker-delimited tables
+
+
+def _marker_table(name):
+    text = (REPO / "docs" / "kernel-authoring.md").read_text()
+    m = re.search(rf"<!-- {name} -->\n(.*?)<!-- /{name} -->", text, flags=re.S)
+    assert m, f"docs/kernel-authoring.md lost its <!-- {name} --> table"
+    rows = []
+    for line in m.group(1).splitlines():
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if len(cells) >= 2 and cells[0].startswith("`"):
+            rows.append(cells)
+    return rows
+
+
+def test_dispatch_table_matches_registry():
+    from repro.kernels import dispatch
+
+    rows = {r[0].strip("`"): r for r in _marker_table("ops:dispatch")}
+    live = {k.op for k in dispatch.registered_keys()}
+    assert set(rows) == live, (
+        f"docs table ops {sorted(rows)} != registry ops {sorted(live)}")
+    for op, row in rows.items():
+        doc_tun = set(re.findall(r"\w+", row[2].strip("`"))) - {""}
+        live_tun = set()
+        for key in dispatch.registered_keys(op):
+            if key.impl == "pallas":
+                live_tun |= set(dispatch._REGISTRY[key].tunable)
+        assert doc_tun == live_tun, (
+            f"{op}: docs tunable {sorted(doc_tun)} != "
+            f"registered {sorted(live_tun)}")
+
+
+def test_tuning_table_matches_static_defaults():
+    from repro.kernels import tuning
+
+    rows = {r[0].strip("`"): r for r in _marker_table("ops:tuning")}
+    assert set(rows) == set(tuning.STATIC_DEFAULTS), (
+        f"docs table ops {sorted(rows)} != "
+        f"STATIC_DEFAULTS {sorted(tuning.STATIC_DEFAULTS)}")
+    for op, row in rows.items():
+        doc = {k: int(v)
+               for k, v in re.findall(r"(\w+)=(\d+)", row[1])}
+        assert doc == tuning.STATIC_DEFAULTS[op], (
+            f"{op}: docs default {doc} != {tuning.STATIC_DEFAULTS[op]}")
+
+
+def test_kv_bits_documented_set_is_live():
+    from repro.kernels import dispatch
+
+    text = (REPO / "docs" / "kernel-authoring.md").read_text()
+    m = re.search(r"KV_BITS = \(([^)]*)\)", text)
+    assert m, "kernel-authoring.md no longer states KV_BITS"
+    doc = tuple(None if t == "None" else int(t)
+                for t in re.split(r",\s*", m.group(1).strip()) if t)
+    assert doc == dispatch.KV_BITS

@@ -1,0 +1,191 @@
+"""Fused paged-attention decode (kernels/paged_attn.py): pallas-vs-twin
+agreement, equivalence with the gather-then-dense oracle, sliding-window
+masking, MLA absorbed decode, dense-vs-paged layout bit-exactness, and the
+model/engine-level fused flag on all three cache backends.
+
+Tolerance taxonomy (see docs/kernel-authoring.md):
+  * pallas(interpret) vs jnp twin — same page-blocked reduction, agreement
+    is ulp-level (XLA reassociation freedom only): atol 1e-6.
+  * fused vs gather-then-dense — different softmax reduction ORDER (blocked
+    running max vs single pass): allclose ~1e-5 on unit-scale inputs.
+  * dense-view vs paged pool through the SAME impl at bs == page_size —
+    bit-exact (gather and dequantize commute; identical kernel calls).
+  * engine fused vs unfused — greedy tokens match exactly on every backend
+    (ulp-level logit noise does not flip a reduced-vocab argmax here).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import get_policy
+from repro.kernels import ops
+from repro.models import attention as A
+from repro.models import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S, HQ, HKV, D = 2, 32, 4, 2, 16
+KV_BITS = (None, 8, 4)
+
+
+def _mk_gqa(seed, bits):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, HQ, D), jnp.float32)
+    kf = jax.random.normal(ks[1], (B, S, HKV, D), jnp.bfloat16)
+    vf = jax.random.normal(ks[2], (B, S, HKV, D), jnp.bfloat16)
+    pos = jnp.array([13, S - 1], jnp.int32)
+    kq, k_s = A.kv_quantize(kf, bits)
+    vq, v_s = A.kv_quantize(vf, bits)
+    return q, kq, k_s, vq, v_s, pos
+
+
+def _oracle_gqa(q, kq, k_s, vq, v_s, pos, bits, window):
+    """The gather-then-dense decode path attn_apply used to run: dequantize
+    the whole cache, repeat kv heads, single-pass softmax."""
+    kd = A.kv_dequantize(kq, k_s, bits).astype(jnp.float32)
+    vd = A.kv_dequantize(vq, v_s, bits).astype(jnp.float32)
+    g = HQ // HKV
+    kr, vr = jnp.repeat(kd, g, axis=2), jnp.repeat(vd, g, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q, kr) / (D**0.5)
+    kpos = jnp.arange(S)[None, None, :]
+    valid = kpos <= pos[:, None, None]
+    if window is not None:
+        valid &= (pos[:, None, None] - kpos) < window
+    p = jax.nn.softmax(jnp.where(valid, s, A.BIG_NEG), axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vr)
+
+
+@pytest.mark.parametrize("bits", KV_BITS)
+@pytest.mark.parametrize("window", [None, 8])
+def test_paged_attn_twin_and_oracle(bits, window):
+    q, kq, k_s, vq, v_s, pos = _mk_gqa(7 + (bits or 0), bits)
+    out_p = ops.paged_attn(q, kq, k_s, vq, v_s, pos, bits=bits,
+                           window=window, impl="pallas")
+    out_j = ops.paged_attn(q, kq, k_s, vq, v_s, pos, bits=bits,
+                           window=window, impl="jnp")
+    np.testing.assert_allclose(out_p, out_j, atol=1e-6, rtol=0)
+    oracle = _oracle_gqa(q, kq, k_s, vq, v_s, pos, bits, window)
+    np.testing.assert_allclose(out_p, oracle, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", KV_BITS)
+def test_paged_attn_dense_vs_pool_bit_exact(bits):
+    """The dense slot layout IS the paged layout with an identity block
+    table: at bs == page_size the two calls are bit-identical."""
+    q, kq, k_s, vq, v_s, pos = _mk_gqa(11 + (bits or 0), bits)
+    ps = 16
+    nb = S // ps
+    reshape = lambda a: (None if a is None  # noqa: E731
+                         else a.reshape(B * nb, ps, *a.shape[2:]))
+    bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    for impl in ("pallas", "jnp"):
+        dense = ops.paged_attn(q, kq, k_s, vq, v_s, pos, bits=bits,
+                               impl=impl, bs=ps)
+        paged = ops.paged_attn(q, reshape(kq), reshape(k_s), reshape(vq),
+                               reshape(v_s), pos, bits=bits,
+                               block_table=bt, impl=impl)
+        assert jnp.array_equal(dense, paged), impl
+
+
+@pytest.mark.parametrize("bits", KV_BITS)
+def test_paged_attn_shuffled_pages_exact(bits):
+    """Physical page placement is invisible: shuffling pool pages while
+    fixing up the block table leaves the output bit-identical."""
+    q, kq, k_s, vq, v_s, pos = _mk_gqa(13 + (bits or 0), bits)
+    ps = 8
+    nb = S // ps
+    reshape = lambda a: (None if a is None  # noqa: E731
+                         else a.reshape(B * nb, ps, *a.shape[2:]))
+    kq, k_s, vq, v_s = reshape(kq), reshape(k_s), reshape(vq), reshape(v_s)
+    bt = jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb)
+    perm = jax.random.permutation(jax.random.key(0), B * nb)
+    inv = jnp.argsort(perm)
+    shuffle = lambda a: None if a is None else a[perm]  # noqa: E731
+    base = ops.paged_attn(q, kq, k_s, vq, v_s, pos, bits=bits,
+                          block_table=bt, impl="pallas")
+    shuf = ops.paged_attn(q, shuffle(kq), shuffle(k_s), shuffle(vq),
+                          shuffle(v_s), pos, bits=bits,
+                          block_table=inv[bt], impl="pallas")
+    assert jnp.array_equal(base, shuf)
+
+
+def test_paged_attn_recycled_pages_masked():
+    """Garbage beyond a slot's write frontier (recycled pool pages) must
+    never reach the output: only rows <= pos contribute."""
+    q, kq, k_s, vq, v_s, pos = _mk_gqa(17, 8)
+    pos = jnp.array([5, 9], jnp.int32)  # frontier well inside page 0
+    base = ops.paged_attn(q, kq, k_s, vq, v_s, pos, bits=8, impl="pallas")
+    # trash every row past the frontier with extreme values
+    rows = jnp.arange(S)[None, :, None, None]
+    trash = jnp.where(rows > pos[:, None, None, None],
+                      jnp.int8(127), kq).astype(jnp.int8)
+    trash_s = jnp.where(rows[..., 0] > pos[:, None, None], 1e9, k_s)
+    out = ops.paged_attn(q, trash, trash_s, vq, v_s, pos, bits=8,
+                         impl="pallas")
+    assert jnp.array_equal(base, out)
+
+
+@pytest.mark.parametrize("bits", KV_BITS)
+def test_paged_mla_attn_twin_and_oracle(bits):
+    H, C, dr = 4, 16, 8
+    ks = jax.random.split(jax.random.key(23 + (bits or 0)), 4)
+    q_lat = jax.random.normal(ks[0], (B, H, C), jnp.float32)
+    q_rope = jax.random.normal(ks[1], (B, H, dr), jnp.float32)
+    c_f = jax.random.normal(ks[2], (B, S, 1, C), jnp.bfloat16)
+    r = jax.random.normal(ks[3], (B, S, 1, dr), jnp.bfloat16)
+    pos = jnp.array([13, S - 1], jnp.int32)
+    cq, c_s = A.kv_quantize(c_f, bits)
+    scale = 1.0 / ((C + dr) ** 0.5)
+    out_p = ops.paged_mla_attn(q_lat, q_rope, cq, c_s, r, pos, bits=bits,
+                               scale=scale, impl="pallas")
+    out_j = ops.paged_mla_attn(q_lat, q_rope, cq, c_s, r, pos, bits=bits,
+                               scale=scale, impl="jnp")
+    np.testing.assert_allclose(out_p, out_j, atol=1e-6, rtol=0)
+    # oracle: mla_apply's absorbed gather-then-dense score over the latents
+    c_all = A.kv_dequantize(cq, c_s, bits)[:, :, 0].astype(jnp.float32)
+    r_all = r[:, :, 0].astype(jnp.float32)
+    s = (jnp.einsum("bhc,btc->bht", q_lat, c_all)
+         + jnp.einsum("bhd,btd->bht", q_rope, r_all)) * scale
+    valid = jnp.arange(S)[None, None, :] <= pos[:, None, None]
+    p = jax.nn.softmax(jnp.where(valid, s, A.BIG_NEG), axis=-1)
+    oracle = jnp.einsum("bht,btc->bhc", p, c_all)
+    np.testing.assert_allclose(out_p, oracle, atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------- model / engine level
+
+
+def _decode_tokens(arch, policy_name, cache, fused):
+    from repro.serve.api import SamplingParams
+    from repro.serve.engine import ServeEngine
+
+    cfg = configs.reduced(configs.get_arch(arch))
+    policy = get_policy(policy_name)
+    params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+    kw = {} if cache == "slot" else {"page_size": 16, "n_pages": 24}
+    eng = ServeEngine(params, cfg, policy, n_slots=2, s_max=32,
+                      cache=cache, fused_attn=fused, **kw)
+    hs = [eng.submit(list(range(3 + i, 9 + i)), SamplingParams(max_new=6))
+          for i in range(2)]
+    eng.drain()
+    return [h.result() for h in hs]
+
+
+@pytest.mark.parametrize("cache", ["slot", "paged", "prefix"])
+def test_engine_fused_matches_unfused(cache):
+    """Greedy decode emits identical tokens with the fused kernel on every
+    cache backend (dense GQA arch, 4-bit KV)."""
+    assert (_decode_tokens("internlm2-1.8b", "w4a8kv4", cache, False)
+            == _decode_tokens("internlm2-1.8b", "w4a8kv4", cache, True))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "deepseek-v3-671b"])
+def test_engine_fused_windowed_and_mla(arch):
+    """Sliding-window (danube) and MLA absorbed decode (deepseek) through
+    the fused flag, paged backend."""
+    assert (_decode_tokens(arch, "w4a8kv4", "paged", False)
+            == _decode_tokens(arch, "w4a8kv4", "paged", True))
