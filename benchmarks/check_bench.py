@@ -36,6 +36,17 @@ the dense-slot reference; seeded stochastic streams must reproduce
 run-to-run while distinct seeds diverge; and a mid-run cancellation must
 free >= 1 page with zero pages leaked after the drain.
 
+``load_slo`` (``benchmarks/load_gen.py``) is gated declaratively on the
+row fields alone: every expected (trace, backend) row present, token
+streams bit-identical continuous vs serialized on slot/paged/prefix,
+TTFT/TPOT percentiles monotone (p50 <= p95 <= p99), goodput coverage
+sane (0 <= goodput_at_slo <= 1, SLO-meeting requests <= submitted), and
+on the gated burst row the two relative latency gates: interactive TTFT
+p95 improves >= MIN_TTFT_IMPROVEMENT x over the serialized engine and
+decode TPOT p95 during the long-doc prefill window stays <=
+MAX_TPOT_PREFILL_RATIO x the no-long-doc baseline. Both gates compare
+runs from the same process, so they hold across runner speeds.
+
 Absolute microseconds are intentionally NOT gated: CI runners vary too much.
 Exit code 0 = green, 1 = any check failed (report on stdout).
 """
@@ -242,12 +253,88 @@ def check_lm_serving(out_dir: pathlib.Path, tuned_dir: pathlib.Path,
     return errors
 
 
+def check_load_slo(out_dir: pathlib.Path) -> list[str]:
+    from benchmarks import load_gen
+
+    doc = _load(out_dir / "BENCH_load_slo.json")
+    rows = {r["name"]: r for r in doc.get("rows", [])
+            if r.get("kind") == "load_slo"}
+    errors: list[str] = []
+
+    # 1. coverage: burst on every backend (the bit-exactness sweep) plus
+    # the steady-state poisson row on the gated backend
+    want = {f"load_burst_{b}" for b in load_gen.LOAD_BACKENDS}
+    want.add(f"load_poisson_{load_gen.GATED_BACKEND}")
+    missing = want - set(rows)
+    if missing:
+        errors.append(f"load_slo: missing rows: {sorted(missing)}")
+
+    for name, r in sorted(rows.items()):
+        # 2. bit-exactness: the continuous engine (mixed steps + ahead-of-
+        # time dispatch) must emit the same streams as the serialized one
+        # under REAL arrival timing — on every backend, every trace
+        if not r.get("tokens_match"):
+            errors.append(
+                f"load_slo/{name}: continuous token streams diverged from "
+                f"the serialized engine under the arrival trace")
+        if r.get("mixed_steps", 0) <= 0:
+            errors.append(
+                f"load_slo/{name}: continuous run recorded no mixed steps "
+                f"(prefill never rode a decode batch)")
+        # 3. percentile sanity: the trace player records exact emit times,
+        # so p50 <= p95 <= p99 must hold for both latency families
+        for fam in ("ttft", "tpot"):
+            p50, p95, p99 = (r[f"{fam}_p50_s"], r[f"{fam}_p95_s"],
+                             r[f"{fam}_p99_s"])
+            if not (0.0 <= p50 <= p95 <= p99):
+                errors.append(
+                    f"load_slo/{name}: {fam} percentiles not monotone: "
+                    f"p50={p50} p95={p95} p99={p99}")
+        # 4. goodput coverage: a fraction, over the submitted request set
+        if not 0.0 <= r.get("goodput_at_slo", -1.0) <= 1.0:
+            errors.append(
+                f"load_slo/{name}: goodput_at_slo "
+                f"{r.get('goodput_at_slo')} outside [0, 1]")
+        if r.get("goodput_requests", 0) > r.get("n_requests", 0):
+            errors.append(
+                f"load_slo/{name}: {r.get('goodput_requests')} SLO-meeting "
+                f"requests > {r.get('n_requests')} submitted")
+
+    # 5. the relative latency gates on the gated burst row (the acceptance
+    # scenario: one long-doc injected into an interactive chat burst)
+    gated = rows.get(f"load_burst_{load_gen.GATED_BACKEND}")
+    if gated is not None:
+        if gated["ttft_improvement"] < load_gen.MIN_TTFT_IMPROVEMENT:
+            errors.append(
+                f"load_slo/{gated['name']}: interactive TTFT p95 improvement "
+                f"{gated['ttft_improvement']}x < "
+                f"{load_gen.MIN_TTFT_IMPROVEMENT}x vs serialized "
+                f"({gated['ttft_interactive_p95_serialized_s']}s serialized "
+                f"vs {gated['ttft_interactive_p95_continuous_s']}s "
+                f"continuous)")
+        if gated.get("prefill_window_gaps", 0) <= 0:
+            errors.append(
+                f"load_slo/{gated['name']}: no decode gaps landed inside "
+                f"the long-doc prefill window — the TPOT gate measured "
+                f"nothing")
+        elif gated["tpot_prefill_ratio"] > load_gen.MAX_TPOT_PREFILL_RATIO:
+            errors.append(
+                f"load_slo/{gated['name']}: decode TPOT p95 during the "
+                f"long-doc prefill {gated['tpot_prefill_ratio']}x the "
+                f"no-prefill baseline > {load_gen.MAX_TPOT_PREFILL_RATIO}x "
+                f"({gated['tpot_p95_during_prefill_s']}s vs "
+                f"{gated['tpot_p95_no_prefill_s']}s)")
+    return errors
+
+
 def check_bench(bench: str, out_dir: pathlib.Path, tuned_dir: pathlib.Path,
                 tol: float) -> list[str]:
     from repro.kernels import tuning
 
     if bench == "lm_serving":
         return check_lm_serving(out_dir, tuned_dir, tol)
+    if bench == "load_slo":
+        return check_load_slo(out_dir)
 
     doc = _load(out_dir / f"BENCH_{bench}.json")
     rows = {r["perm"]: r for r in doc.get("rows", [])}

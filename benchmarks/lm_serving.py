@@ -180,13 +180,13 @@ def run_serve_prefill() -> list[dict]:
         "prefill_calls_chunked": m_c["prefill_jit_calls"],
         "prefill_calls_stepwise": m_s["prefill_jit_calls"],
         "call_reduction": round(reduction, 2),
-        "ttft_avg_chunked_s": round(m_c["ttft_avg_s"], 4),
-        "ttft_avg_stepwise_s": round(m_s["ttft_avg_s"], 4),
+        "ttft_p50_chunked_s": round(m_c["slo/ttft_p50_s"], 4),
+        "ttft_p50_stepwise_s": round(m_s["slo/ttft_p50_s"], 4),
         "tokens_per_s_chunked": round(m_c["tokens_per_s"], 2),
         "tokens_per_s_stepwise": round(m_s["tokens_per_s"], 2),
         "tokens_match": out_c == out_s,
     }
-    csv_row("lm_serve_prefill", m_c["ttft_avg_s"] * 1e6,
+    csv_row("lm_serve_prefill", m_c["slo/ttft_p50_s"] * 1e6,
             f"calls_chunked={row['prefill_calls_chunked']};"
             f"calls_stepwise={row['prefill_calls_stepwise']};"
             f"reduction={reduction:.1f}x;tokens_match={row['tokens_match']}")
@@ -355,8 +355,8 @@ def run_prefix_serving() -> list[dict]:
             "page_reduction": round(page_red, 3),
             "prefix_hit_rate": round(m_p["cache/prefix_hit_rate"], 3),
             "cow_copies": m_p["cache/cow_copies"],
-            "ttft_avg_cold_s": round(m_c["ttft_avg_s"], 4),
-            "ttft_avg_prefix_s": round(m_p["ttft_avg_s"], 4),
+            "ttft_p50_cold_s": round(m_c["slo/ttft_p50_s"], 4),
+            "ttft_p50_prefix_s": round(m_p["slo/ttft_p50_s"], 4),
             "wall_s_cold": round(dt_c, 4),
             "wall_s_prefix": round(dt_p, 4),
             "tokens_match": out_c == out_p,

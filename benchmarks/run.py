@@ -25,7 +25,8 @@ def main() -> None:
     if args.json_dir:
         os.environ["BENCH_OUT_DIR"] = args.json_dir
 
-    from benchmarks import fig4_matmul, fig5_speedup, fig6_energy, lm_serving, tab1_qntpack
+    from benchmarks import (fig4_matmul, fig5_speedup, fig6_energy, load_gen,
+                            lm_serving, tab1_qntpack)
 
     suites = {
         "fig4": fig4_matmul.run,     # MACs/cycle by weight/ifmap precision
@@ -33,6 +34,7 @@ def main() -> None:
         "fig5": fig5_speedup.run,    # speedup vs fp32 baseline
         "fig6": fig6_energy.run,     # energy model per inference
         "lm": lm_serving.run,        # beyond-paper: LM decode bytes/token
+        "load_slo": load_gen.run,    # arrival traces: TTFT/TPOT tails + goodput
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

@@ -70,11 +70,24 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed; request i uses seed + i")
-    ap.add_argument("--fused-attn", action="store_true",
-                    help="decode attention via the fused paged-attention "
-                         "kernel (in-kernel KV dequant) instead of "
-                         "gather-then-dense; tokens are bit-identical "
-                         "either way (see docs/kernel-authoring.md)")
+    ap.add_argument("--fused-attn", dest="fused_attn", action="store_const",
+                    const=True, default=None,
+                    help="force decode attention through the fused "
+                         "paged-attention kernel (in-kernel KV dequant); "
+                         "default: on for chunkable dense families, "
+                         "gather-then-dense otherwise — tokens are "
+                         "bit-identical either way "
+                         "(see docs/kernel-authoring.md)")
+    ap.add_argument("--no-fused-attn", dest="fused_attn",
+                    action="store_const", const=False,
+                    help="force the gather-then-dense decode path (the "
+                         "fused-default escape hatch)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="continuous batching: prefill chunks ride decode "
+                         "steps under a token budget and steps dispatch "
+                         "ahead-of-time — tokens stay bit-identical to "
+                         "the default serialized loop (watch mixed_steps "
+                         "in the metrics line)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -88,7 +101,7 @@ def main():
                       impl=args.impl, scheduler=args.scheduler,
                       prefill=args.prefill, prefill_chunk=args.chunk,
                       cache=args.cache, page_size=args.page_size,
-                      fused_attn=args.fused_attn)
+                      fused_attn=args.fused_attn, mixed=args.mixed)
     rng = np.random.RandomState(0)
     system = rng.randint(1, cfg.vocab, size=args.shared_prefix).astype(np.int32)
     prompts = [np.concatenate(
@@ -122,10 +135,14 @@ def main():
     m = eng.metrics()
     print(f"metrics: prefill={m['prefill_mode']}(chunk={m['prefill_chunk']}, "
           f"{m['prefill_jit_calls']} jit calls) scheduler={m['scheduler']} "
-          f"decode_steps={m['decode_steps']} tokens/s={m['tokens_per_s']:.1f} "
-          f"ttft_avg={m['ttft_avg_s']*1e3:.1f}ms "
-          f"(queue {m['ttft_queue_avg_s']*1e3:.1f} + "
-          f"prefill {m['ttft_prefill_avg_s']*1e3:.1f}) "
+          f"decode_steps={m['decode_steps']} "
+          f"mixed_steps={m['mixed_steps']} "
+          f"tokens/s={m['tokens_per_s']:.1f} "
+          f"ttft p50={m['slo/ttft_p50_s']*1e3:.1f}ms "
+          f"p95={m['slo/ttft_p95_s']*1e3:.1f}ms "
+          f"(p50 queue {m['slo/ttft_queue_p50_s']*1e3:.1f} + "
+          f"prefill {m['slo/ttft_prefill_p50_s']*1e3:.1f}) "
+          f"tpot p95={m['slo/tpot_p95_s']*1e3:.1f}ms "
           f"completed={m['requests_completed']} cancelled={m['cancelled']} "
           f"stopped={m['stopped_on_sequence']} "
           f"deadline_misses={m['deadline_misses']} "

@@ -34,6 +34,14 @@ def main():
     ap.add_argument("--cache", default="slot",
                     choices=("slot", "paged", "prefix"))
     ap.add_argument("--page-size", type=int, default=None)
+    ap.add_argument("--mixed", action="store_true",
+                    help="continuous batching: prefill chunks ride decode "
+                         "steps under a token budget, steps dispatch "
+                         "ahead-of-time (tokens bit-identical to the "
+                         "serialized loop; needs chunked prefill)")
+    ap.add_argument("--mixed-budget", type=int, default=None,
+                    help="prefill tokens folded into each mixed step "
+                         "(default: the prefill chunk size)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy decode")
     ap.add_argument("--top-k", type=int, default=0)
@@ -51,7 +59,8 @@ def main():
     eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=args.s_max,
                       scheduler=args.scheduler, prefill=args.prefill,
                       prefill_chunk=args.prefill_chunk, cache=args.cache,
-                      page_size=args.page_size)
+                      page_size=args.page_size, mixed=args.mixed,
+                      mixed_budget=args.mixed_budget)
     rng = np.random.RandomState(0)
     handles = [
         eng.submit(rng.randint(1, cfg.vocab, size=4).astype(np.int32),
@@ -64,9 +73,11 @@ def main():
     m = eng.metrics()
     print(f"served {len(handles)} requests / {done} tokens; "
           f"prefill={m['prefill_mode']} ({m['prefill_jit_calls']} jit calls); "
-          f"ttft avg {m['ttft_avg_s'] * 1e3:.1f} ms "
-          f"(queue {m['ttft_queue_avg_s'] * 1e3:.1f} + "
-          f"prefill {m['ttft_prefill_avg_s'] * 1e3:.1f}); "
+          f"ttft p50 {m['slo/ttft_p50_s'] * 1e3:.1f} ms / "
+          f"p95 {m['slo/ttft_p95_s'] * 1e3:.1f} ms "
+          f"(p50 queue {m['slo/ttft_queue_p50_s'] * 1e3:.1f} + "
+          f"prefill {m['slo/ttft_prefill_p50_s'] * 1e3:.1f}); "
+          f"tpot p95 {m['slo/tpot_p95_s'] * 1e3:.1f} ms; "
           f"tokens/s {m['tokens_per_s']:.1f}; "
           f"step ema {m['step_ema_s'] * 1e3:.1f} ms; "
           f"stragglers {m['stragglers']}")

@@ -268,7 +268,10 @@ def seq_insert(buf: jax.Array, new: jax.Array, pos: jax.Array, *,
         return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, 1)
     B, S_new = new.shape[:2]
     idx = pos[:, None] + jnp.arange(S_new)[None]  # (B, S_new)
-    return buf.at[jnp.arange(B)[:, None], idx].set(new)
+    # drop (never clamp) rows past s_max: a mixed step's right-padded tail
+    # near capacity must not clamp-shift onto the slot's real last row —
+    # the same semantics the paged twin gets from its scratch-page binning
+    return buf.at[jnp.arange(B)[:, None], idx].set(new, mode="drop")
 
 
 def cache_update(cache: dict, k: jax.Array, v: jax.Array, pos: jax.Array,

@@ -819,3 +819,99 @@ def prefill_into_pages(params: dict, tokens: jax.Array, block_row: jax.Array,
 
     new_caches = jax.tree.map(scatter_row, caches, row)
     return logits, new_caches
+
+
+def mixed_step(params: dict, tokens: jax.Array, pos: jax.Array,
+               n_real: jax.Array, caches: list, cfg: ArchConfig,
+               policy: PrecisionPolicy, *,
+               impl: ops.Impl = "auto",
+               block_tables: Optional[jax.Array] = None,
+               page_size: Optional[int] = None):
+    """One continuous-batching step: every lane of the (B, W) token batch is
+    either a DECODE lane (``n_real[b] == 1``: its next single token), a
+    PREFILL lane (``n_real[b]`` up to W: a right-padded chunk of its prompt),
+    or idle (``n_real[b] == 0``). All lanes lower through ONE forward — a
+    long prompt no longer monopolizes the device between decode steps
+    (Sarathi-style chunked piggybacking), it rides the decode batch W
+    prompt tokens at a time.
+
+    The whole batch attends through the cache (``attend_cached``, the same
+    branch :func:`prefill_chunk` uses), so a decode lane here is numerically
+    identical to :func:`decode_step` at S=1 batched over W causally-masked
+    positions — lanes are row-independent through embed/attention/MLP/head,
+    which is what makes mixed-step token streams bit-equal to the serialized
+    engine's. ``pos`` is (B,) int32 per-lane write positions.
+
+    Returns (logits (B, 1, V), new_caches): lane b's logits are taken at its
+    last REAL position (``n_real[b] - 1``), so a prefill lane's final chunk
+    yields exactly the last-prompt-token logits the serialized prefill
+    returns, and a decode lane yields its position-0 logits. Idle lanes
+    (n_real 0) return garbage the caller discards.
+
+    After the forward, each lane's padded tail rows (chunk positions >=
+    n_real[b]) are scrubbed to zero, so the cache state is bit-identical to
+    the serialized engine's after the same logical writes — dense leaves
+    (count, B, s_max, ...) scrub in place; paged leaves (count, n_pages,
+    page_size, ...) scrub through ``block_tables`` (required then, with the
+    pool's static ``page_size``). Rows past a lane's table (or mapped to the
+    scratch page 0) are left alone — the scratch page is trash by contract.
+
+    No ``fused_attn`` parameter: the fused decode kernel requires S == 1 and
+    a mixed step is S == W > 1, so it always takes the unfused cache-read
+    branch. Greedy lanes are unaffected (the PR-6 bench gate proves fused
+    and unfused argmax-equal); engines mixing fused serialized steps with
+    mixed steps under stochastic sampling should pin ``fused_attn=False``.
+    """
+    if cfg.family not in PREFILL_CHUNKABLE_FAMILIES:
+        raise NotImplementedError(
+            f"mixed prefill+decode steps unsupported for family "
+            f"{cfg.family!r} (supported: {PREFILL_CHUNKABLE_FAMILIES}); "
+            f"serve serialized via decode_step/prefill instead")
+    if block_tables is not None and page_size is None:
+        raise ValueError("page_size is required with block_tables")
+    _, nfn = _norm_fns(cfg)
+    mode = "serve"
+    x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
+    B, W = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    n_real = jnp.asarray(n_real, jnp.int32)
+    pos_ids = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None]
+    x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
+                                  impl=impl, caches=caches, cache_pos=pos,
+                                  remat=False, attend_cached=True,
+                                  block_tables=block_tables)
+    # per-lane last REAL position -> (B, 1, d) before the head matmul, so
+    # the vocab projection is O(B), never O(B * W)
+    last_idx = jnp.maximum(n_real - 1, 0)
+    x_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)
+    x_last = nfn(params["final_norm"], x_last)
+    logits = linear_apply(params["head"], x_last, policy.of("head"), mode=mode,
+                          impl=impl)
+
+    # per-lane pad scrub: zero every row this step wrote beyond the lane's
+    # real tokens (same invariant as prefill_into_slot/_pages — "no stale
+    # K/V", and cache bytes bit-identical to the serialized engine's)
+    row_idx = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B, W)
+    pad = jnp.arange(W, dtype=jnp.int32)[None] >= n_real[:, None]   # (B, W)
+    if block_tables is None:
+        scrub_idx = jnp.where(pad, row_idx, jnp.int32(2**30))
+        b_ix = jnp.arange(B, dtype=jnp.int32)[:, None]
+        new_caches = jax.tree.map(
+            lambda a: a.at[:, b_ix, scrub_idx].set(jnp.zeros((), a.dtype),
+                                                   mode="drop"),
+            new_caches)
+    else:
+        nb = block_tables.shape[1]
+        blk = row_idx // page_size
+        off = row_idx % page_size
+        page = jnp.take_along_axis(block_tables, jnp.minimum(blk, nb - 1),
+                                   axis=1)
+        # scrub only pad rows that map to a real allocated page; rows past
+        # the lane's table or binned to the scratch page stay trash
+        page = jnp.where(pad & (blk < nb) & (page != 0), page,
+                         jnp.int32(2**30))
+        new_caches = jax.tree.map(
+            lambda a: a.at[:, page, off].set(jnp.zeros((), a.dtype),
+                                             mode="drop"),
+            new_caches)
+    return logits, new_caches

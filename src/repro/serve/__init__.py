@@ -15,14 +15,18 @@ Layering (each module owns one concern; the engine only composes):
     (fcfs / spf / bestfit / priority), page-budget aware,
   * :mod:`repro.serve.prefill`   — chunked/batched vs token-by-token prompt
     ingestion (both cache backends),
-  * :mod:`repro.serve.boundary`  — host->jit copy discipline (host_copy),
+  * :mod:`repro.serve.boundary`  — host->jit copy discipline (host_copy,
+    SnapshotRing for pipelined dispatch),
+  * :mod:`repro.serve.stats`     — streaming latency percentiles
+    (``LatencyHistogram``, the ``slo/`` metrics fragment),
   * :mod:`repro.serve.engine`    — the decode+sample loop
-    (submit/step/drain/close, batch-compat run()), and the metrics
-    snapshot.
+    (submit/step/drain/close, batch-compat run()): serialized mode, or
+    continuous batching (mixed prefill+decode steps with ahead-of-time
+    dispatch) on the chunkable families, and the metrics snapshot.
 """
 
 from repro.serve.api import Request, RequestHandle, SamplingParams
-from repro.serve.boundary import host_copy
+from repro.serve.boundary import SnapshotRing, host_copy
 from repro.serve.cache import (
     CACHE_BACKENDS,
     CapacityError,
@@ -31,8 +35,14 @@ from repro.serve.cache import (
     make_cache,
 )
 from repro.serve.engine import KernelStatsAccumulator, ServeEngine, StepMonitor
-from repro.serve.prefill import ChunkedPrefill, StepwisePrefill, make_prefiller
+from repro.serve.prefill import (
+    ChunkedPrefill,
+    PrefillCursor,
+    StepwisePrefill,
+    make_prefiller,
+)
 from repro.serve.prefix import PrefixCache
+from repro.serve.stats import LatencyHistogram
 from repro.serve.scheduler import (
     SCHEDULERS,
     BestFitScheduler,
@@ -45,10 +55,10 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "CACHE_BACKENDS", "CapacityError", "PagedKVCache", "PrefixCache", "SlotCache",
-    "host_copy", "make_cache",
+    "LatencyHistogram", "SnapshotRing", "host_copy", "make_cache",
     "KernelStatsAccumulator", "Request", "RequestHandle", "SamplingParams",
     "ServeEngine", "StepMonitor",
-    "ChunkedPrefill", "StepwisePrefill", "make_prefiller",
+    "ChunkedPrefill", "PrefillCursor", "StepwisePrefill", "make_prefiller",
     "SCHEDULERS", "BestFitScheduler", "FCFSScheduler", "PriorityScheduler",
     "Scheduler", "ShortestPromptFirstScheduler", "make_scheduler",
 ]

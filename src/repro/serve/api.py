@@ -138,6 +138,7 @@ class Request:
     t_submit: float = 0.0
     t_admit: float = 0.0
     t_first: float = 0.0
+    t_last_tok: float = 0.0  # engine TPOT probe: previous token's emit time
     t_done: float = 0.0
     t_deadline: Optional[float] = None
 

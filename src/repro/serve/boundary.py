@@ -11,6 +11,14 @@ Every host-side numpy value that is BOTH (a) fed to a jitted call and
 (b) mutated by the serving loop afterwards must cross the boundary through
 :func:`host_copy`. The copy is O(bytes of bookkeeping) — positions and block
 tables, never cache pages — and buys back determinism.
+
+:class:`SnapshotRing` is the pipelined refinement: an engine that keeps
+several steps in flight (ahead-of-time dispatch) takes the same snapshots
+every step, so instead of allocating a fresh buffer per call it cycles a
+small ring of preallocated buffers per call-site. A buffer is rewritten
+only after ``generations - 1`` newer dispatches have been issued — size the
+ring to the in-flight depth plus slack and the snapshot a dispatched step
+reads stays immutable until that step has retired.
 """
 
 from __future__ import annotations
@@ -26,3 +34,43 @@ def host_copy(a) -> jnp.ndarray:
     ``jnp.asarray`` can alias anything; the jitted callee then reads the
     snapshot no matter what the serving loop does to ``a`` next."""
     return jnp.asarray(np.array(a, copy=True))
+
+
+class SnapshotRing:
+    """Double-buffered (generalized: N-buffered) host->device snapshots.
+
+    ``take(name, a)`` behaves like :func:`host_copy` but recycles buffers:
+    each call-site ``name`` owns a ring of ``generations`` numpy buffers,
+    and successive takes cycle through them. Because ``jnp.asarray``
+    aliases the numpy buffer on the CPU backend, a buffer handed to a
+    dispatched step must not be rewritten until that step retires — the
+    ring guarantees a buffer is reused only after ``generations - 1``
+    NEWER takes of the same name, so an engine with at most ``k`` steps in
+    flight is safe with ``generations >= k + 1``.
+
+    One ring per call-site name (not per shape): two same-shaped vectors
+    snapshotted in the same step (e.g. temperatures and top-p, both
+    ``(n_slots,) f32``) must never collide on one buffer.
+    """
+
+    def __init__(self, generations: int):
+        if generations < 2:
+            raise ValueError(f"need >= 2 generations, got {generations}")
+        self.generations = int(generations)
+        self._rings: dict[str, list[np.ndarray]] = {}
+        self._idx: dict[str, int] = {}
+
+    def take(self, name: str, a) -> jnp.ndarray:
+        a = np.asarray(a)
+        ring = self._rings.setdefault(name, [])
+        if len(ring) < self.generations:
+            buf = np.array(a, copy=True)  # still growing: fresh buffer
+            ring.append(buf)
+        else:
+            i = self._idx[name] = (self._idx.get(name, -1) + 1) % len(ring)
+            buf = ring[i]
+            if buf.shape != a.shape or buf.dtype != a.dtype:
+                buf = ring[i] = np.array(a, copy=True)
+            else:
+                np.copyto(buf, a)
+        return jnp.asarray(buf)

@@ -37,9 +37,35 @@ last-token logits through that same sampler (the old engine had a second,
 hand-rolled argmax here). Completion, stop-sequence hits, and cancellation
 all route through one ``_release`` path that recycles cache resources,
 stamps lifecycle timestamps, and harvests kernel stats. ``metrics()``
-snapshots TTFT (with a queue-wait vs prefill-time split), throughput,
-lifecycle counters (cancelled / stopped_on_sequence / deadline_misses),
-queue depth, page-pool health, and straggler counts.
+snapshots TTFT/TPOT percentiles (``slo/`` namespace, streaming histograms;
+TTFT keeps its queue-wait vs prefill-time split), throughput, lifecycle
+counters (cancelled / stopped_on_sequence / deadline_misses), queue depth,
+page-pool health, and straggler counts.
+
+``mixed=True`` (chunkable families only) switches the loop to CONTINUOUS
+batching — the engine-loop restructuring the serialized mode's step
+anatomy cannot express:
+
+  * **Mixed steps** (``models.model.mixed_step``): prefill chunks ride the
+    decode batch under a per-step token budget (``mixed_budget``), so a
+    long prompt no longer monopolizes the device between decode steps —
+    in-flight streams keep their inter-token cadence while the newcomer
+    prefills ``Scheduler.allot``-sized chunks per step.
+  * **Ahead-of-time dispatch**: up to ``inflight`` steps are issued before
+    the first result is read back. Each step's next-token input is the
+    PREVIOUS step's on-device sampled output (``_chain`` — no host round
+    trip), host bookkeeping crosses the boundary through a
+    :class:`~repro.serve.boundary.SnapshotRing` (the pipelined form of the
+    ``host_copy`` discipline), and the only host sync in the hot loop is
+    retiring the oldest ticket. Sampling-counter and budget state is
+    advanced speculatively at dispatch; a release (stop hit, cancel, slot
+    turnover) simply invalidates the slot's still-in-flight tickets — the
+    retire path drops them by request identity.
+
+Token streams are bit-identical to the serialized engine on all three
+cache backends: mixed-step lanes are row-independent and pad-scrubbed
+(see ``mixed_step``), and the counter-based sampler makes each stream a
+pure function of (params, prompt, sampling params).
 """
 
 from __future__ import annotations
@@ -68,10 +94,11 @@ from repro.serve.api import (
     as_params,
     check_stop,
 )
-from repro.serve.boundary import host_copy
+from repro.serve.boundary import SnapshotRing, host_copy
 from repro.serve.cache import PagedKVCache, SlotCache, make_cache
-from repro.serve.prefill import make_prefiller
+from repro.serve.prefill import ChunkedPrefill, PrefillCursor, make_prefiller
 from repro.serve.scheduler import Scheduler, make_scheduler
+from repro.serve.stats import LatencyHistogram
 
 
 class StepMonitor:
@@ -134,9 +161,20 @@ class ServeEngine:
                  cache: Union[str, SlotCache, PagedKVCache, None] = "slot",
                  page_size: Optional[int] = None,
                  n_pages: Optional[int] = None,
-                 fused_attn: bool = False):
+                 fused_attn: Optional[bool] = None,
+                 mixed: bool = False,
+                 mixed_budget: Optional[int] = None,
+                 inflight: int = 2):
         self.params, self.cfg, self.policy = params, cfg, policy
-        self.fused_attn = fused_attn
+        # fused decode default-on where the attn_decode bench gate holds
+        # (>= 1.1x on every measured KV dtype; benchmarks/lm_serving.py
+        # run_attn_decode asserts greedy token-equality fused vs unfused).
+        # vlm keeps the unfused default pending a gate measurement of the
+        # mrope path; fused_attn=False stays the escape hatch.
+        if fused_attn is None:
+            fused_attn = cfg.family in M.PREFILL_CHUNKABLE_FAMILIES
+        self.fused_attn = bool(fused_attn)
+        fused_attn = self.fused_attn
         # fail at construction, not mid-decode, if the policy needs a kernel
         # cell outside the registered 27-permutation library
         dispatch.ensure_policy_supported(policy)
@@ -180,6 +218,73 @@ class ServeEngine:
             step_fn=lambda toks: self._step(toks)[1], n_slots=n_slots,
             page_size=self.cache.page_size if self.cache.paged else None)
 
+        # --- continuous batching (mixed steps + ahead-of-time dispatch) ----
+        self.mixed = bool(mixed)
+        if self.mixed and not isinstance(self.prefiller, ChunkedPrefill):
+            raise ValueError(
+                f"mixed=True needs the chunked prefill path; family "
+                f"{cfg.family!r} (prefill={self.prefiller.name!r}) serves "
+                f"serialized only")
+        self.mixed_budget = int(prefill_chunk if mixed_budget is None
+                                else mixed_budget)
+        if self.mixed_budget < 1:
+            raise ValueError(f"mixed_budget must be >= 1, got {mixed_budget}")
+        self.inflight_depth = int(inflight)
+        if self.inflight_depth < 1:
+            raise ValueError(f"inflight must be >= 1, got {inflight}")
+        #: slot -> PrefillCursor: admitted requests whose prompts are still
+        #: entering the cache, chunk by budget-allotted chunk
+        self._prefilling: dict[int, PrefillCursor] = {}
+        self._admit_seq = 0  # cursor ordering for Scheduler.allot
+        #: dispatched-but-not-retired steps, oldest first. Each ticket is
+        #: (device next-token vector, [(slot, request, emits), ...]); depth
+        #: is bounded by ``inflight``.
+        self._tickets: collections.deque = collections.deque()
+        #: the previous dispatch's on-device sampled tokens — next step's
+        #: decode-lane input, chained device-to-device (no host round trip)
+        self._chain = jnp.zeros((n_slots,), jnp.int32)
+        #: dispatch-owned speculative token budget per slot (the retire-side
+        #: twin is slot_remaining, owned by _emit)
+        self._spec_remaining = np.zeros(n_slots, np.int32)
+        self._ring = SnapshotRing(self.inflight_depth + 2)
+        self._progress = 0  # admissions+dispatches+retires+releases (drain)
+        self._mixed_steps = 0
+        if self.mixed:
+            ps = self.cache.page_size if self.cache.paged else None
+
+            def mixed_and_sample(p, host_toks, chain, use_chain, pos, n_real,
+                                 caches, samp, bt=None):
+                # decode lanes take their input from the DEVICE chain (the
+                # previous step's sampled output); prefill/idle lanes keep
+                # the host-provided rows
+                toks = host_toks.at[:, 0].set(
+                    jnp.where(use_chain, chain, host_toks[:, 0]))
+                logits, new_caches = M.mixed_step(
+                    p, toks, pos, n_real, caches, cfg, policy, impl=impl,
+                    block_tables=bt, page_size=ps)
+                nxt = M.sample_tokens(logits[:, 0], *samp)
+                return nxt, new_caches
+
+            def chain_and_sample(p, chain, pos, caches, samp, bt=None):
+                # pure-decode fast path: S=1, fused attention eligible
+                logits, new_caches = M.decode_step(
+                    p, chain[:, None], pos, caches, cfg, policy, impl=impl,
+                    block_tables=bt, fused_attn=fused_attn)
+                nxt = M.sample_tokens(logits[:, -1], *samp)
+                return nxt, new_caches
+
+            if self.cache.paged:
+                self._mixed = jax.jit(
+                    lambda p, toks, chain, uc, pos, nr, bt, caches, samp:
+                    mixed_and_sample(p, toks, chain, uc, pos, nr, caches,
+                                     samp, bt=bt))
+                self._chain_decode = jax.jit(
+                    lambda p, chain, pos, bt, caches, samp:
+                    chain_and_sample(p, chain, pos, caches, samp, bt=bt))
+            else:
+                self._mixed = jax.jit(mixed_and_sample)
+                self._chain_decode = jax.jit(chain_and_sample)
+
         # metrics accumulators
         self._decode_steps = 0
         self._tokens_out = 0
@@ -187,9 +292,12 @@ class ServeEngine:
         self._cancelled = 0
         self._stopped_on_seq = 0
         self._deadline_misses = 0
-        self._ttft: list[float] = []
-        self._ttft_queue: list[float] = []    # submit -> admission
-        self._ttft_prefill: list[float] = []  # admission -> first token
+        # streaming SLO histograms (no unbounded per-request lists):
+        # TTFT + its queue/prefill split, and TPOT (inter-token gaps)
+        self._h_ttft = LatencyHistogram()
+        self._h_ttft_queue = LatencyHistogram()
+        self._h_ttft_prefill = LatencyHistogram()
+        self._h_tpot = LatencyHistogram()
         self._serve_seconds = 0.0
         self._run_t0: Optional[float] = None  # set while a step is active
         self._next_rid = 0
@@ -296,6 +404,7 @@ class ServeEngine:
         for s, r in enumerate(self.slot_req):
             if r is not None:
                 self._release(s, CANCELLED)
+        self._tickets.clear()  # in-flight steps: nobody left to emit for
         self._closed = True
 
     # --- request lifecycle: the loop ----------------------------------------
@@ -344,6 +453,12 @@ class ServeEngine:
         self._top_ps[slot] = 1.0
         self._seeds[slot] = 0
         self._counters[slot] = 0
+        # continuous mode: drop the slot's prefill cursor and speculative
+        # budget; its still-in-flight tickets retire as no-ops (the retire
+        # path checks request identity before emitting)
+        self._prefilling.pop(slot, None)
+        self._spec_remaining[slot] = 0
+        self._progress += 1
         self.cache.release(slot)
         if status == CANCELLED:
             self._cancelled += 1
@@ -366,14 +481,22 @@ class ServeEngine:
         tok = int(tok)
         r.out.append(tok)
         self.slot_remaining[slot] -= 1
-        self._counters[slot] = len(r.out)  # counter-based PRNG: next index
+        if not self.mixed:
+            # counter-based PRNG: next index. In continuous mode the
+            # DISPATCH side owns this speculatively (steps in flight have
+            # already consumed counters past len(r.out)) — never clobber it
+            # from the retire side.
+            self._counters[slot] = len(r.out)
         self._tokens_out += 1
+        now = time.perf_counter()
         if len(r.out) == 1:
-            now = time.perf_counter()
             r.t_first = now  # stamped HERE, so max_new=1 requests get one too
-            self._ttft.append(now - r.t_submit)
-            self._ttft_queue.append(r.t_admit - r.t_submit)
-            self._ttft_prefill.append(now - r.t_admit)
+            self._h_ttft.observe(now - r.t_submit)
+            self._h_ttft_queue.observe(r.t_admit - r.t_submit)
+            self._h_ttft_prefill.observe(now - r.t_admit)
+        else:
+            self._h_tpot.observe(now - r.t_last_tok)
+        r.t_last_tok = now
         if r.on_token:
             r.on_token(r.rid, tok)
         if r.status != ACTIVE:  # the callback cancelled us mid-emit
@@ -399,6 +522,8 @@ class ServeEngine:
             len(r.prompt) + r.max_new, prompt=r.prompt)
         while self.scheduler.pending():
             req = self.scheduler.next_request(fits, cost)
+            if req is None:  # defensive: a custom scheduler declined to pick
+                return
             slot = self.cache.acquire(len(req.prompt) + req.max_new,
                                       prompt=req.prompt)
             if slot is None:  # no slot / page budget: requeue at the front
@@ -415,6 +540,19 @@ class ServeEngine:
             self._counters[slot] = 0
             self.slot_req[slot] = req
             self.slot_remaining[slot] = req.max_new
+            self._progress += 1
+            if self.mixed:
+                # continuous mode: no blocking prefill here — park a cursor
+                # and let the mixed steps carry the prompt in under the
+                # token budget. The first output token is sampled by the
+                # dispatch that carries the FINAL chunk (counter 0, from
+                # the same last-token logits the serialized path uses).
+                self._admit_seq += 1
+                self._spec_remaining[slot] = req.max_new
+                self._prefilling[slot] = PrefillCursor(
+                    req, req.prompt, slot=slot, order=self._admit_seq,
+                    off=int(self.cache.pos[slot]))
+                continue
             # prefix backend: acquire() mapped the matched prefix and set
             # pos[slot] past it; the prefiller skips those tokens and the
             # post-prefill commit publishes the new full pages to the index
@@ -430,43 +568,207 @@ class ServeEngine:
     def _active(self) -> bool:
         return any(r is not None for r in self.slot_req)
 
+    # --- continuous mode: ahead-of-time dispatch ----------------------------
+
+    def _samp_snapshot(self):
+        """Ring-buffered snapshots of the per-slot sampling vectors (the
+        pipelined analogue of _step's host_copy calls — see SnapshotRing)."""
+        return (self._ring.take("temps", self._temps),
+                self._ring.take("top_ks", self._top_ks),
+                self._ring.take("top_ps", self._top_ps),
+                self._ring.take("seeds", self._seeds),
+                self._ring.take("counters", self._counters))
+
+    def _dispatch(self) -> bool:
+        """Issue ONE step without waiting for its result (continuous mode).
+
+        Decode lanes feed on the device-side ``_chain`` (the previous
+        dispatch's sampled output — no host readback); prefill lanes carry
+        their scheduler-allotted chunk of prompt tokens. Bookkeeping that
+        the host mutates afterwards crosses the boundary via the snapshot
+        ring. PRNG counters and per-slot budgets advance SPECULATIVELY here
+        — the retire side only materializes tokens. Returns False when no
+        lane had work to dispatch."""
+        decode_lanes = [
+            s for s, r in enumerate(self.slot_req)
+            if r is not None and s not in self._prefilling
+            and self._spec_remaining[s] > 0]
+        allot = (self.scheduler.allot(list(self._prefilling.values()),
+                                      self.mixed_budget)
+                 if self._prefilling else [])
+        if not decode_lanes and not allot:
+            return False
+        t0 = time.perf_counter()
+        #: (slot, request, emits): emits=False for non-final prefill chunks
+        lanes: list[tuple[int, Request, bool]] = []
+        if allot:
+            # mixed step: prefill chunks ride the decode batch, width =
+            # the token budget (static; one trace per backend)
+            W = self.mixed_budget
+            host_toks = np.zeros((self.n_slots, W), np.int32)
+            n_real = np.zeros(self.n_slots, np.int32)
+            use_chain = np.zeros(self.n_slots, bool)
+            writes: list[tuple[int, int]] = []
+            commits: list[tuple[int, Request]] = []
+            for cur, n in allot:
+                s = cur.slot
+                chunk = cur.take(n)
+                host_toks[s, :len(chunk)] = chunk
+                n_real[s] = len(chunk)
+                self.cache.prepare(s, len(chunk))  # paged: draw pages
+                writes.append((s, len(chunk)))
+                # the final chunk's lane emits the request's FIRST token
+                lanes.append((s, cur.req, cur.done))
+                if cur.done:
+                    commits.append((s, cur.req))
+            for s in decode_lanes:
+                n_real[s] = 1
+                use_chain[s] = True
+                self.cache.prepare(s, 1)
+                writes.append((s, 1))
+                lanes.append((s, self.slot_req[s], True))
+            # snapshots AFTER every prepare (prepare mutates block tables),
+            # BEFORE the speculative counter bump below
+            samp = self._samp_snapshot()
+            args = (self.params, jnp.asarray(host_toks), self._chain,
+                    self._ring.take("use_chain", use_chain),
+                    self._ring.take("pos", self.cache.pos),
+                    self._ring.take("n_real", n_real))
+            if self.cache.paged:
+                nxt, self.cache.caches = self._mixed(
+                    *args, self._ring.take("bt", self.cache.block_tables),
+                    self.cache.caches, samp)
+            else:
+                nxt, self.cache.caches = self._mixed(
+                    *args, self.cache.caches, samp)
+            self._mixed_steps += 1
+            for s, n in writes:
+                self.cache.advance(s, n)
+            for s, req in commits:
+                # prompt fully in flight: flip the lane to decode and
+                # publish its pages to the prefix index (content writes are
+                # ordered before any later reader's gather — single stream)
+                del self._prefilling[s]
+                self.cache.commit(s, req.prompt)
+        else:
+            # pure-decode fast path: S=1, fused attention eligible
+            for s in decode_lanes:
+                self.cache.prepare(s, 1)
+                lanes.append((s, self.slot_req[s], True))
+            samp = self._samp_snapshot()
+            pos = self._ring.take("pos", self.cache.pos)
+            if self.cache.paged:
+                nxt, self.cache.caches = self._chain_decode(
+                    self.params, self._chain, pos,
+                    self._ring.take("bt", self.cache.block_tables),
+                    self.cache.caches, samp)
+            else:
+                nxt, self.cache.caches = self._chain_decode(
+                    self.params, self._chain, pos, self.cache.caches, samp)
+            for s in decode_lanes:
+                self.cache.advance(s, 1)
+        self._decode_steps += 1
+        # speculative state: steps already in flight have consumed these
+        # counter values; the retire side must never rewrite them
+        for s, req, emits in lanes:
+            if emits:
+                self._counters[s] += 1
+                self._spec_remaining[s] -= 1
+        self._chain = nxt
+        self._tickets.append((nxt, lanes))
+        self._progress += 1
+        self.monitor.observe(time.perf_counter() - t0)
+        return True
+
+    def _retire_one(self) -> None:
+        """Materialize the OLDEST in-flight step — the hot loop's single
+        host sync. Lanes whose request turned over since dispatch (stop
+        hit, cancel, slot reuse) are dropped by identity check."""
+        nxt, lanes = self._tickets.popleft()
+        nxt = np.asarray(nxt)  # blocks until the step's results are ready
+        self._progress += 1
+        for s, req, emits in lanes:
+            if not emits:
+                continue
+            if self.slot_req[s] is not req or req.status != ACTIVE:
+                continue  # released after this step was issued: speculative
+            self._emit(s, int(nxt[s]))
+
     def step(self) -> bool:
-        """One engine iteration — admit waiting requests, then one fused
-        decode+sample step for every active slot. The caller owns the loop:
-        ``drain()``, ``handle.tokens()``, and ``handle.result()`` all lower
-        to repeated ``step()`` calls. Returns True while work remains."""
+        """One engine iteration. The caller owns the loop: ``drain()``,
+        ``handle.tokens()``, and ``handle.result()`` all lower to repeated
+        ``step()`` calls. Returns True while work remains.
+
+        Serialized mode (default): admit (blocking prefill) + one fused
+        decode+sample step for every active slot, result read back
+        immediately. Continuous mode (``mixed=True``): retire the oldest
+        ticket once the in-flight queue is full, admit (non-blocking),
+        dispatch one mixed or pure-decode step ahead of time; when nothing
+        is dispatchable, retire a ticket instead so the pipeline always
+        moves."""
         if self._closed:
             raise RuntimeError("engine is closed")
         t0 = time.perf_counter()
         self._run_t0 = t0
         try:
-            self._admit()
-            if self._active():
-                # one decode step for every active slot: feed each slot's
-                # last generated token (never prompt[-1] — prefill already
-                # sampled the first token from its own logits)
-                toks = np.zeros((self.n_slots, 1), np.int32)
-                for s, r in enumerate(self.slot_req):
-                    if r is not None:
-                        toks[s, 0] = r.out[-1]
-                        self.cache.prepare(s, 1)  # paged: draw the next page
-                nxt, _ = self._step(toks)
-                self._decode_steps += 1
-                nxt = np.asarray(nxt)
-                for s in range(self.n_slots):
-                    if self.slot_req[s] is None:
-                        continue
-                    self.cache.advance(s, 1)
-                    self._emit(s, int(nxt[s]))
+            if self.mixed:
+                if len(self._tickets) >= self.inflight_depth:
+                    self._retire_one()
+                self._admit()
+                if not self._dispatch() and self._tickets:
+                    self._retire_one()
+            else:
+                self._admit()
+                if self._active():
+                    # one decode step for every active slot: feed each
+                    # slot's last generated token (never prompt[-1] —
+                    # prefill already sampled the first token from its own
+                    # logits)
+                    toks = np.zeros((self.n_slots, 1), np.int32)
+                    for s, r in enumerate(self.slot_req):
+                        if r is not None:
+                            toks[s, 0] = r.out[-1]
+                            self.cache.prepare(s, 1)  # paged: draw a page
+                    nxt, _ = self._step(toks)
+                    self._decode_steps += 1
+                    nxt = np.asarray(nxt)
+                    for s in range(self.n_slots):
+                        if self.slot_req[s] is None:
+                            continue
+                        self.cache.advance(s, 1)
+                        self._emit(s, int(nxt[s]))
+                        self._progress += 1
         finally:
             self._serve_seconds += time.perf_counter() - t0
             self._run_t0 = None
-        return bool(self.scheduler.pending() or self._active())
+        return bool(self.scheduler.pending() or self._active()
+                    or self._tickets)
 
     def drain(self) -> None:
-        """Step until no queued or active work remains."""
-        while self.step():
-            pass
+        """Step until no queued or active work remains.
+
+        A step can be a no-op while work is still pending — queued requests
+        the cache cannot admit yet (their capacity frees when a client
+        cancels, or never). The old loop busy-spun at 100% CPU in that
+        state; now each no-progress step yields the CPU, and a bounded run
+        of consecutive no-progress steps (nothing in flight that could
+        still unblock us) raises instead of spinning forever."""
+        idle = 0
+        while True:
+            before = self._progress
+            more = self.step()
+            if not more:
+                return
+            if self._progress != before:
+                idle = 0
+                continue
+            idle += 1
+            time.sleep(0)  # no-op step: yield instead of busy-spinning
+            if idle >= 1000:
+                raise RuntimeError(
+                    f"drain() wedged: {self.scheduler.pending()} queued "
+                    f"request(s) cannot be admitted and no in-flight work "
+                    f"remains to free capacity (after {idle} no-op steps)")
 
     def run(self, requests: Sequence[Request], *,
             on_token: Optional[Callable] = None):
@@ -491,8 +793,10 @@ class ServeEngine:
     # --- observability ------------------------------------------------------
 
     def metrics(self) -> dict:
-        """Serving metrics snapshot: latency (TTFT, split into queue wait vs
-        prefill time), throughput, lifecycle counters (completed /
+        """Serving metrics snapshot: SLO latency percentiles (``slo/``
+        namespace — TTFT p50/p95/p99 with its queue-wait vs prefill-time
+        split, and TPOT inter-token gaps; streaming histograms, O(1) memory
+        — serve/stats.py), throughput, lifecycle counters (completed /
         cancelled / stopped_on_sequence / deadline_misses), backlog,
         cache-backend health (page utilization / fragmentation / effective
         bytes-per-token on the paged backend), and the straggler count from
@@ -515,15 +819,19 @@ class ServeEngine:
             "tokens_generated": self._tokens_out,
             "tokens_per_s": self._tokens_out / elapsed,
             "decode_steps": self._decode_steps,
+            "mode": "continuous" if self.mixed else "serialized",
+            "mixed_steps": self._mixed_steps,
+            "mixed_budget": self.mixed_budget if self.mixed else 0,
+            "inflight_depth": self.inflight_depth if self.mixed else 0,
+            "inflight": len(self._tickets),
+            "fused_attn": self.fused_attn,
             "prefill_mode": self.prefiller.name,
             "prefill_chunk": self.prefiller.chunk,
             "prefill_jit_calls": self.prefiller.jit_calls,
-            "ttft_avg_s": float(np.mean(self._ttft)) if self._ttft else 0.0,
-            "ttft_max_s": float(np.max(self._ttft)) if self._ttft else 0.0,
-            "ttft_queue_avg_s": (float(np.mean(self._ttft_queue))
-                                 if self._ttft_queue else 0.0),
-            "ttft_prefill_avg_s": (float(np.mean(self._ttft_prefill))
-                                   if self._ttft_prefill else 0.0),
+            **self._h_ttft.summary("slo/ttft"),
+            **self._h_ttft_queue.summary("slo/ttft_queue"),
+            **self._h_ttft_prefill.summary("slo/ttft_prefill"),
+            **self._h_tpot.summary("slo/tpot"),
             "queue_depth": self.scheduler.pending(),
             "active_slots": self.cache.active_slots(),
             "slot_resets": self.cache.resets,

@@ -48,6 +48,48 @@ from repro.models.model import ArchConfig
 from repro.serve.boundary import host_copy
 
 
+class PrefillCursor:
+    """One request's in-progress prompt, chunked into mixed steps.
+
+    The continuous-batching engine does not run ``ChunkedPrefill.prefill``'s
+    blocking loop; it keeps a cursor per admitted-but-not-yet-prefilled slot
+    and, each step, asks the scheduler to split the mixed-step token budget
+    across the live cursors (``Scheduler.allot``). ``take(n)`` hands out the
+    next ``n`` prompt tokens; when ``done``, the slot flips to a decode lane
+    and its request's first output token samples from the same last-token
+    logits the serialized prefill path returns.
+
+    ``off`` starts at the slot's resident position (a matched shared prefix
+    on the prefix backend is skipped exactly as in ``ChunkedPrefill``);
+    ``order`` is the admission sequence number FCFS allotment sorts by.
+    """
+
+    __slots__ = ("req", "prompt", "slot", "order", "off")
+
+    def __init__(self, req, prompt: np.ndarray, *, slot: int, order: int,
+                 off: int = 0):
+        self.req = req
+        self.prompt = np.asarray(prompt, np.int32)
+        self.slot = slot
+        self.order = order
+        self.off = int(off)
+
+    @property
+    def remaining(self) -> int:
+        return len(self.prompt) - self.off
+
+    @property
+    def done(self) -> bool:
+        return self.off >= len(self.prompt)
+
+    def take(self, n: int) -> np.ndarray:
+        """Consume and return the next ``min(n, remaining)`` prompt tokens."""
+        n = min(int(n), self.remaining)
+        chunk = self.prompt[self.off : self.off + n]
+        self.off += n
+        return chunk
+
+
 class ChunkedPrefill:
     """Single-request batched/chunked prefill (slot or paged backend)."""
 

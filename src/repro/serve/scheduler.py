@@ -87,6 +87,32 @@ class Scheduler:
         except ValueError:
             return False
 
+    # --- mixed-step budget allotment ---------------------------------------
+
+    def allot(self, cursors: Sequence, budget: int) -> list[tuple]:
+        """Split a mixed step's prefill-token budget across the in-flight
+        prompt cursors (``serve.prefill.PrefillCursor``). Returns
+        ``[(cursor, n_tokens), ...]`` with ``sum(n) <= budget`` and every
+        ``n >= 1``; cursors are served greedily in :meth:`_allot_key` order
+        — admission order for the base/fcfs/bestfit policies, so one
+        prompt's chunks stay consecutive and TTFT is FIFO-fair. A lane
+        carries at most one chunk per step (the mixed step has one row
+        span per lane), so a cursor's allotment is also capped by the
+        budget even when it is the only one."""
+        take: list[tuple] = []
+        budget = int(budget)
+        for cur in sorted(cursors, key=self._allot_key):
+            if budget <= 0:
+                break
+            n = min(cur.remaining, budget)
+            if n >= 1:
+                take.append((cur, n))
+                budget -= n
+        return take
+
+    def _allot_key(self, cursor):
+        return cursor.order
+
 
 class FCFSScheduler(Scheduler):
     """Admit in arrival order (the pre-refactor engine's implicit policy)."""
@@ -107,6 +133,11 @@ class ShortestPromptFirstScheduler(Scheduler):
              cost: Optional[CostFn] = None) -> int:
         return min(range(len(self._queue)),
                    key=lambda i: (len(self._queue[i].prompt), i))
+
+    def _allot_key(self, cursor):
+        # shortest-remaining-prompt-first: the cursor closest to its first
+        # token drains first, the same mean-TTFT argument as admission
+        return (cursor.remaining, cursor.order)
 
 
 class BestFitScheduler(Scheduler):
@@ -167,6 +198,15 @@ class PriorityScheduler(Scheduler):
                     i)
 
         return min(fitting, key=key)
+
+    def _allot_key(self, cursor):
+        # mixed-step budget follows the same strict-priority + EDF order as
+        # admission: an urgent prompt's chunks preempt lower classes' budget
+        r = cursor.req
+        dl = getattr(r, "t_deadline", None)
+        return (-getattr(r, "priority", 0),
+                dl if dl is not None else float("inf"),
+                cursor.order)
 
 
 SCHEDULERS: dict[str, type] = {

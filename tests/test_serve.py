@@ -84,7 +84,10 @@ def test_metrics_snapshot(paired_runs):
     assert m["requests_completed"] == len(LENGTHS)
     assert m["tokens_generated"] == 4 * len(LENGTHS)
     assert m["queue_depth"] == 0 and m["active_slots"] == 0
-    assert m["ttft_avg_s"] > 0.0 and m["ttft_max_s"] >= m["ttft_avg_s"]
+    assert m["slo/ttft_p50_s"] > 0.0
+    assert m["slo/ttft_max_s"] >= m["slo/ttft_p50_s"]
+    assert m["slo/ttft_p50_s"] <= m["slo/ttft_p95_s"] <= m["slo/ttft_p99_s"]
+    assert m["slo/ttft_count"] == len(LENGTHS)
     assert m["tokens_per_s"] > 0.0
     assert m["prefill_mode"] == "chunked" and m["scheduler"] == "fcfs"
 
