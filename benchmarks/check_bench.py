@@ -302,6 +302,19 @@ def check_load_slo(out_dir: pathlib.Path) -> list[str]:
 
     # 5. the relative latency gates on the gated burst row (the acceptance
     # scenario: one long-doc injected into an interactive chat burst)
+    # 6. tracing evidence: every continuous run carries a Tracer, so each
+    # row must report events recorded and a complete span chain per request
+    for name, r in sorted(rows.items()):
+        if "trace_events" not in r:
+            errors.append(f"load_slo/{name}: no trace_events field — the "
+                          f"continuous run was not traced")
+        elif r["trace_events"] <= 0:
+            errors.append(f"load_slo/{name}: tracer attached but recorded "
+                          f"zero events")
+        if not r.get("trace_spans_complete", False):
+            errors.append(f"load_slo/{name}: span chains incomplete or "
+                          f"mis-nested for at least one request")
+
     gated = rows.get(f"load_burst_{load_gen.GATED_BACKEND}")
     if gated is not None:
         if gated["ttft_improvement"] < load_gen.MIN_TTFT_IMPROVEMENT:
@@ -327,6 +340,43 @@ def check_load_slo(out_dir: pathlib.Path) -> list[str]:
     return errors
 
 
+def check_trace_overhead(out_dir: pathlib.Path) -> list[str]:
+    from benchmarks import load_gen
+
+    doc = _load(out_dir / "BENCH_trace_overhead.json")
+    rows = {r["name"]: r for r in doc.get("rows", [])
+            if r.get("kind") == "trace_overhead"}
+    errors: list[str] = []
+
+    # coverage: both engine modes measured (the serialized loop and the
+    # continuous dispatch/retire pipeline have different emission sites)
+    want = {"trace_overhead_serialized_slot",
+            "trace_overhead_continuous_paged"}
+    missing = want - set(rows)
+    if missing:
+        errors.append(f"trace_overhead: missing rows: {sorted(missing)}")
+
+    for name, r in sorted(rows.items()):
+        # the claim itself: attaching a Tracer costs <= 5% per step,
+        # measured in-process (on/off ratio — runner-speed independent)
+        if r.get("overhead_ratio", float("inf")) > load_gen.MAX_TRACE_OVERHEAD:
+            errors.append(
+                f"trace_overhead/{name}: traced step cost "
+                f"{r['overhead_ratio']}x untraced > "
+                f"{load_gen.MAX_TRACE_OVERHEAD}x "
+                f"({r['step_on_s']}s vs {r['step_off_s']}s)")
+        # the measurement must have traced something, or the on-run was a
+        # no-op and the ratio is vacuous
+        if r.get("trace_events", 0) <= 0:
+            errors.append(
+                f"trace_overhead/{name}: traced run recorded zero events")
+        if r.get("step_off_s", 0.0) <= 0.0:
+            errors.append(
+                f"trace_overhead/{name}: untraced step cost "
+                f"{r.get('step_off_s')}s is not positive")
+    return errors
+
+
 def check_bench(bench: str, out_dir: pathlib.Path, tuned_dir: pathlib.Path,
                 tol: float) -> list[str]:
     from repro.kernels import tuning
@@ -335,6 +385,8 @@ def check_bench(bench: str, out_dir: pathlib.Path, tuned_dir: pathlib.Path,
         return check_lm_serving(out_dir, tuned_dir, tol)
     if bench == "load_slo":
         return check_load_slo(out_dir)
+    if bench == "trace_overhead":
+        return check_trace_overhead(out_dir)
 
     doc = _load(out_dir / f"BENCH_{bench}.json")
     rows = {r["perm"]: r for r in doc.get("rows", [])}

@@ -35,6 +35,7 @@ def main() -> None:
         "fig6": fig6_energy.run,     # energy model per inference
         "lm": lm_serving.run,        # beyond-paper: LM decode bytes/token
         "load_slo": load_gen.run,    # arrival traces: TTFT/TPOT tails + goodput
+        "trace_overhead": load_gen.run_trace_overhead,  # tracing <= 5%/step
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():

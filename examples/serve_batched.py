@@ -25,7 +25,7 @@ import numpy as np
 from repro import configs
 from repro.core.policy import get_policy
 from repro.models import model as M
-from repro.serve import Request, SamplingParams, ServeEngine
+from repro.serve import Request, SamplingParams, ServeEngine, Tracer
 
 
 def main():
@@ -88,6 +88,11 @@ def main():
                          "ahead-of-time — tokens stay bit-identical to "
                          "the default serialized loop (watch mixed_steps "
                          "in the metrics line)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request-lifecycle + engine-step spans and "
+                         "write a Chrome/Perfetto trace_event JSON here "
+                         "(open at ui.perfetto.dev; tokens are bit-identical"
+                         " with tracing on or off — docs/observability.md)")
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get_arch(args.arch))
@@ -97,11 +102,13 @@ def main():
                  if "w_packed" in str(k))
     print(f"arch={cfg.name} policy={policy.name} packed-weight bytes={packed}")
 
+    tracer = Tracer() if args.trace else None
     eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=64,
                       impl=args.impl, scheduler=args.scheduler,
                       prefill=args.prefill, prefill_chunk=args.chunk,
                       cache=args.cache, page_size=args.page_size,
-                      fused_attn=args.fused_attn, mixed=args.mixed)
+                      fused_attn=args.fused_attn, mixed=args.mixed,
+                      trace=tracer)
     rng = np.random.RandomState(0)
     system = rng.randint(1, cfg.vocab, size=args.shared_prefix).astype(np.int32)
     prompts = [np.concatenate(
@@ -159,6 +166,14 @@ def main():
               f"misses) cow_copies={m['cache/cow_copies']} "
               f"index_pages={m['cache/index_pages']} "
               f"evictions={m['cache/evictions']}")
+    if tracer is not None:
+        # in-process completeness gate: every request must carry a full,
+        # nested span chain (CI runs this as the traced serving smoke)
+        checked = tracer.check_request_spans(range(args.requests))
+        print(f"trace: {tracer.export_chrome(args.trace)} "
+              f"({checked} span chains OK, "
+              f"{m['trace/events_retained']} events, "
+              f"{m['trace/events_dropped']} dropped)")
 
 
 if __name__ == "__main__":

@@ -15,7 +15,8 @@ import numpy as np
 from repro import configs
 from repro.core.policy import get_policy
 from repro.models import model as M
-from repro.serve import SamplingParams, ServeEngine
+from repro.serve import SamplingParams, ServeEngine, Tracer, write_exposition
+from repro.serve.promexport import maybe_serve
 
 
 def main():
@@ -48,6 +49,16 @@ def main():
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed; request i uses seed + i")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record request/step spans; write a Chrome/Perfetto"
+                         " trace_event JSON here (open at ui.perfetto.dev)")
+    ap.add_argument("--trace-jsonl", default=None, metavar="OUT.jsonl",
+                    help="also dump the raw event log, one JSON per line")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve metrics() as a Prometheus text exposition "
+                         "on http://127.0.0.1:PORT/metrics (0 = ephemeral)")
+    ap.add_argument("--metrics-dump", default=None, metavar="OUT.prom",
+                    help="write the final Prometheus exposition to a file")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
 
@@ -56,11 +67,15 @@ def main():
         cfg = configs.reduced(cfg)
     policy = get_policy(args.policy)
     params = M.init_params(jax.random.key(0), cfg, policy, mode="serve")
+    tracer = Tracer() if (args.trace or args.trace_jsonl) else None
     eng = ServeEngine(params, cfg, policy, n_slots=args.slots, s_max=args.s_max,
                       scheduler=args.scheduler, prefill=args.prefill,
                       prefill_chunk=args.prefill_chunk, cache=args.cache,
                       page_size=args.page_size, mixed=args.mixed,
-                      mixed_budget=args.mixed_budget)
+                      mixed_budget=args.mixed_budget, trace=tracer)
+    metrics_srv = maybe_serve(eng.metrics, args.metrics_port)
+    if metrics_srv is not None:
+        print(f"metrics: {metrics_srv.url}")
     rng = np.random.RandomState(0)
     handles = [
         eng.submit(rng.randint(1, cfg.vocab, size=4).astype(np.int32),
@@ -81,6 +96,19 @@ def main():
           f"tokens/s {m['tokens_per_s']:.1f}; "
           f"step ema {m['step_ema_s'] * 1e3:.1f} ms; "
           f"stragglers {m['stragglers']}")
+    if tracer is not None:
+        tracer.check_request_spans(h.rid for h in handles)
+        if args.trace:
+            print(f"trace: {tracer.export_chrome(args.trace)} "
+                  f"({m['trace/events_retained']} events, "
+                  f"{m['trace/events_dropped']} dropped)")
+        if args.trace_jsonl:
+            print(f"trace jsonl: {tracer.export_jsonl(args.trace_jsonl)}")
+    if args.metrics_dump:
+        print(f"metrics exposition: "
+              f"{write_exposition(args.metrics_dump, eng.metrics())}")
+    if metrics_srv is not None:
+        metrics_srv.close()
 
 
 if __name__ == "__main__":

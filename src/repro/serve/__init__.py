@@ -19,6 +19,12 @@ Layering (each module owns one concern; the engine only composes):
     SnapshotRing for pipelined dispatch),
   * :mod:`repro.serve.stats`     — streaming latency percentiles
     (``LatencyHistogram``, the ``slo/`` metrics fragment),
+  * :mod:`repro.serve.trace`     — off-by-default request-lifecycle and
+    engine-step tracing (``Tracer``: bounded ring buffer, Chrome/Perfetto
+    + JSONL exporters; ``ServeEngine(trace=...)``),
+  * :mod:`repro.serve.promexport` — Prometheus text exposition of
+    ``metrics()`` (render/parse/file dump + the stdlib ``MetricsServer``
+    scrape endpoint),
   * :mod:`repro.serve.engine`    — the decode+sample loop
     (submit/step/drain/close, batch-compat run()): serialized mode, or
     continuous batching (mixed prefill+decode steps with ahead-of-time
@@ -42,7 +48,9 @@ from repro.serve.prefill import (
     make_prefiller,
 )
 from repro.serve.prefix import PrefixCache
+from repro.serve.promexport import MetricsServer, write_exposition
 from repro.serve.stats import LatencyHistogram
+from repro.serve.trace import TraceEvent, Tracer
 from repro.serve.scheduler import (
     SCHEDULERS,
     BestFitScheduler,
@@ -61,4 +69,5 @@ __all__ = [
     "ChunkedPrefill", "PrefillCursor", "StepwisePrefill", "make_prefiller",
     "SCHEDULERS", "BestFitScheduler", "FCFSScheduler", "PriorityScheduler",
     "Scheduler", "ShortestPromptFirstScheduler", "make_scheduler",
+    "MetricsServer", "TraceEvent", "Tracer", "write_exposition",
 ]

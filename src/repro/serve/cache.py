@@ -208,6 +208,13 @@ class SlotCache:
             "kv_bytes_per_token": total / (self.n_slots * self.s_max),
         }
 
+    def counters(self) -> dict:
+        """The cheap monotone counters only — O(1) plain ints, no cache-tree
+        walk. The tracing engine diffs consecutive snapshots to attribute
+        page draws / COW copies / evictions to individual steps; ``stats()``
+        stays the full (costlier) health snapshot for ``metrics()``."""
+        return {"resets": self.resets}
+
 
 class PagedKVCache:
     """Paged KV cache: global page pool + per-slot block tables.
@@ -468,6 +475,11 @@ class PagedKVCache:
             "kv_bytes_total": total,
             "kv_bytes_per_token": total / (self.n_pages * self.page_size),
         }
+
+    def counters(self) -> dict:
+        """O(1) monotone counters for per-step trace deltas (see
+        :meth:`SlotCache.counters`)."""
+        return {"resets": self.resets, "pages_drawn": self.pages_drawn}
 
 
 CACHE_BACKENDS: dict[str, type] = {

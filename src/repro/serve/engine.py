@@ -99,6 +99,7 @@ from repro.serve.cache import PagedKVCache, SlotCache, make_cache
 from repro.serve.prefill import ChunkedPrefill, PrefillCursor, make_prefiller
 from repro.serve.scheduler import Scheduler, make_scheduler
 from repro.serve.stats import LatencyHistogram
+from repro.serve.trace import ENGINE_TRACK, Tracer, slot_track
 
 
 class StepMonitor:
@@ -133,6 +134,11 @@ class KernelStatsAccumulator:
     def __init__(self):
         self._counts: collections.Counter = collections.Counter()
         self._last = dict(dispatch.DISPATCH_COUNTS)
+        # per-OP wall clock (dispatch.DISPATCH_SECONDS, populated only while
+        # dispatch.set_timing is on) — harvested with the same reset-robust
+        # delta discipline as the counts
+        self._seconds: collections.Counter = collections.Counter()
+        self._last_s = dict(dispatch.DISPATCH_SECONDS)
 
     def harvest(self) -> None:
         cur = dict(dispatch.DISPATCH_COUNTS)
@@ -144,11 +150,33 @@ class KernelStatsAccumulator:
             if d > 0:
                 self._counts[k] += d
         self._last = cur
+        cur_s = dict(dispatch.DISPATCH_SECONDS)
+        for op, v in cur_s.items():
+            prev = self._last_s.get(op, 0.0)
+            d = v - prev if v >= prev else v
+            if d > 0:
+                self._seconds[op] += d
+        self._last_s = cur_s
 
     def stats(self) -> dict[str, int]:
         self.harvest()
         return {str(k): v for k, v in sorted(self._counts.items(),
                                              key=lambda kv: str(kv[0]))}
+
+    def op_stats(self) -> dict:
+        """Per-OP rollup for ``metrics()``: ``kernels/<op>_calls`` (cell
+        counts summed over the op's permutations) and ``kernels/<op>_s``
+        (accumulated wall clock; 0.0 unless timing was enabled — the engine
+        flips ``dispatch.set_timing`` on when a tracer is attached)."""
+        self.harvest()
+        calls: collections.Counter = collections.Counter()
+        for k, v in self._counts.items():
+            calls[k.op] += v
+        out: dict = {}
+        for op in sorted(set(calls) | set(self._seconds)):
+            out[f"kernels/{op}_calls"] = calls.get(op, 0)
+            out[f"kernels/{op}_s"] = float(self._seconds.get(op, 0.0))
+        return out
 
 
 class ServeEngine:
@@ -164,8 +192,15 @@ class ServeEngine:
                  fused_attn: Optional[bool] = None,
                  mixed: bool = False,
                  mixed_budget: Optional[int] = None,
-                 inflight: int = 2):
+                 inflight: int = 2,
+                 trace: Optional[Tracer] = None):
         self.params, self.cfg, self.policy = params, cfg, policy
+        #: optional event sink (serve/trace.py). None = zero overhead: every
+        #: emission site is behind an `is not None` check, and the per-op
+        #: kernel timer stays off.
+        self.trace = trace
+        if trace is not None:
+            dispatch.set_timing(True)
         # fused decode default-on where the attn_decode bench gate holds
         # (>= 1.1x on every measured KV dtype; benchmarks/lm_serving.py
         # run_attn_decode asserts greedy token-equality fused vs unfused).
@@ -217,6 +252,10 @@ class ServeEngine:
             prefill, params, cfg, policy, impl=impl, chunk=prefill_chunk,
             step_fn=lambda toks: self._step(toks)[1], n_slots=n_slots,
             page_size=self.cache.page_size if self.cache.paged else None)
+        self.prefiller.tracer = trace  # chunked path emits per-chunk spans
+        #: last cache-counter snapshot (trace mode): per-step deltas of page
+        #: draws / COW copies / evictions ride the step span's args
+        self._cache_ctr_last = self.cache.counters() if trace else None
 
         # --- continuous batching (mixed steps + ahead-of-time dispatch) ----
         self.mixed = bool(mixed)
@@ -320,6 +359,30 @@ class ServeEngine:
         this engine's steps still land here."""
         return self._kstats.stats()
 
+    # --- tracing helpers ----------------------------------------------------
+
+    def _cache_deltas(self) -> dict:
+        """Per-step deltas of the cache backend's O(1) monotone counters
+        (pages drawn, COW copies, evictions, ...) since the previous step
+        span — only touched while tracing."""
+        cur = self.cache.counters()
+        last = self._cache_ctr_last
+        self._cache_ctr_last = cur
+        return {k: v - last.get(k, 0) for k, v in cur.items()
+                if v - last.get(k, 0)}
+
+    def _trace_queued_exit(self, req: Request) -> None:
+        """A request cancelled while still QUEUED never owned a slot, so its
+        terminal events land on the engine track (same completeness contract:
+        every traced request ends in a ``request`` span + ``release``)."""
+        if self.trace is None:
+            return
+        self.trace.span("request", cat="request", t0=req.t_submit,
+                        t1=req.t_done, track=ENGINE_TRACK, rid=req.rid)
+        self.trace.instant("release", cat="request", track=ENGINE_TRACK,
+                           ts=req.t_done, rid=req.rid, status=req.status,
+                           tokens=0)
+
     # --- request lifecycle: submission --------------------------------------
 
     def submit(self, prompt, params: Optional[SamplingParams] = None, *,
@@ -367,6 +430,11 @@ class ServeEngine:
         req.out = []
         self._next_rid = max(self._next_rid, req.rid + 1)
         self.scheduler.submit([req])
+        if self.trace is not None:
+            self.trace.instant("submit", cat="request", track=ENGINE_TRACK,
+                               ts=now, rid=req.rid,
+                               prompt_tokens=len(req.prompt),
+                               max_new=req.max_new)
         return RequestHandle(self, req)
 
     def cancel(self, req: Request) -> bool:
@@ -386,6 +454,7 @@ class ServeEngine:
             req.status = CANCELLED
             req.t_done = time.perf_counter()
             self._cancelled += 1
+            self._trace_queued_exit(req)
             return True
         self._release(req.slot, CANCELLED)
         return True
@@ -401,6 +470,7 @@ class ServeEngine:
             req.status = CANCELLED
             req.t_done = time.perf_counter()
             self._cancelled += 1
+            self._trace_queued_exit(req)
         for s, r in enumerate(self.slot_req):
             if r is not None:
                 self._release(s, CANCELLED)
@@ -444,6 +514,19 @@ class ServeEngine:
         now = time.perf_counter()
         r.status = status
         r.t_done = now
+        if self.trace is not None:
+            # terminal span chain, emitted now that every end is known: the
+            # decode span exists only if a first token was ever produced
+            # (r.t_first pre-defensive-stamp), the request span always.
+            if r.t_first != 0.0:
+                self.trace.span("decode", cat="request", t0=r.t_first, t1=now,
+                                track=slot_track(slot), rid=r.rid,
+                                tokens=len(r.out))
+            self.trace.span("request", cat="request", t0=r.t_submit, t1=now,
+                            track=slot_track(slot), rid=r.rid)
+            self.trace.instant("release", cat="request",
+                               track=slot_track(slot), ts=now, rid=r.rid,
+                               status=status, tokens=len(r.out))
         if r.t_first == 0.0:  # defensive: released before any token
             r.t_first = now
         self.slot_req[slot] = None
@@ -494,6 +577,10 @@ class ServeEngine:
             self._h_ttft.observe(now - r.t_submit)
             self._h_ttft_queue.observe(r.t_admit - r.t_submit)
             self._h_ttft_prefill.observe(now - r.t_admit)
+            if self.trace is not None:
+                self.trace.instant("first_token", cat="request",
+                                   track=slot_track(slot), ts=now, rid=r.rid,
+                                   ttft_s=now - r.t_submit)
         else:
             self._h_tpot.observe(now - r.t_last_tok)
         r.t_last_tok = now
@@ -532,6 +619,12 @@ class ServeEngine:
             req.status = ACTIVE
             req.slot = slot
             req.t_admit = time.perf_counter()
+            if self.trace is not None:
+                # the queue-wait span lands HERE (not at submit) because the
+                # slot — hence the track — is unknown until admission
+                self.trace.span("queued", cat="request", t0=req.t_submit,
+                                t1=req.t_admit, track=slot_track(slot),
+                                rid=req.rid, priority=req.priority)
             p = as_params(req)
             self._temps[slot] = p.temperature
             self._top_ks[slot] = p.top_k
@@ -556,8 +649,14 @@ class ServeEngine:
             # prefix backend: acquire() mapped the matched prefix and set
             # pos[slot] past it; the prefiller skips those tokens and the
             # post-prefill commit publishes the new full pages to the index
-            logits = self.prefiller.prefill(self.cache, slot, req.prompt)
+            logits = self.prefiller.prefill(self.cache, slot, req.prompt,
+                                            rid=req.rid)
             self.cache.commit(slot, req.prompt)
+            if self.trace is not None:
+                self.trace.span("prefill", cat="request", t0=req.t_admit,
+                                t1=time.perf_counter(),
+                                track=slot_track(slot), rid=req.rid,
+                                tokens=len(req.prompt))
             first = self._sample(
                 logits[:, -1],
                 jnp.float32([p.temperature]), jnp.int32([p.top_k]),
@@ -610,6 +709,7 @@ class ServeEngine:
             use_chain = np.zeros(self.n_slots, bool)
             writes: list[tuple[int, int]] = []
             commits: list[tuple[int, Request]] = []
+            chunkinfo: list[tuple[int, int, int, int]] = []
             for cur, n in allot:
                 s = cur.slot
                 chunk = cur.take(n)
@@ -619,6 +719,7 @@ class ServeEngine:
                 writes.append((s, len(chunk)))
                 # the final chunk's lane emits the request's FIRST token
                 lanes.append((s, cur.req, cur.done))
+                chunkinfo.append((s, cur.req.rid, cur.chunks - 1, len(chunk)))
                 if cur.done:
                     commits.append((s, cur.req))
             for s in decode_lanes:
@@ -642,6 +743,15 @@ class ServeEngine:
                 nxt, self.cache.caches = self._mixed(
                     *args, self.cache.caches, samp)
             self._mixed_steps += 1
+            if self.trace is not None:
+                # each lane's chunk shares this step's host-dispatch window
+                # (device work overlaps by design); chunks of one request
+                # stay sequential because steps are sequential host-side
+                t1 = time.perf_counter()
+                for s, rid, idx, n in chunkinfo:
+                    self.trace.span(f"prefill_chunk[{idx}]", cat="request",
+                                    t0=t0, t1=t1, track=slot_track(s),
+                                    rid=rid, slot=s, tokens=n)
             for s, n in writes:
                 self.cache.advance(s, n)
             for s, req in commits:
@@ -650,6 +760,13 @@ class ServeEngine:
                 # ordered before any later reader's gather — single stream)
                 del self._prefilling[s]
                 self.cache.commit(s, req.prompt)
+                if self.trace is not None:
+                    # prompt fully dispatched: the prefill span closes here
+                    # (admission -> final chunk in flight + pages published)
+                    self.trace.span("prefill", cat="request", t0=req.t_admit,
+                                    t1=time.perf_counter(),
+                                    track=slot_track(s), rid=req.rid,
+                                    tokens=len(req.prompt))
         else:
             # pure-decode fast path: S=1, fused attention eligible
             for s in decode_lanes:
@@ -677,7 +794,24 @@ class ServeEngine:
         self._chain = nxt
         self._tickets.append((nxt, lanes))
         self._progress += 1
-        self.monitor.observe(time.perf_counter() - t0)
+        now = time.perf_counter()
+        if self.trace is not None:
+            # the engine-pipeline view of this dispatch: budget split,
+            # in-flight depth, and the step's cache-counter deltas (pages
+            # drawn / COW copies / evictions attributed to THIS step)
+            n_prefill = len(allot)
+            self.trace.span(
+                "mixed_step" if allot else "decode_step", cat="engine",
+                t0=t0, t1=now, track=ENGINE_TRACK,
+                step=self._decode_steps - 1,
+                decode_lanes=len(decode_lanes), prefill_lanes=n_prefill,
+                prefill_tokens=int(sum(n for _, n in allot)),
+                budget=self.mixed_budget, inflight=len(self._tickets),
+                **self._cache_deltas())
+            self.trace.counter("queue_depth", self.scheduler.pending(),
+                               ts=now)
+            self.trace.counter("inflight", len(self._tickets), ts=now)
+        self.monitor.observe(now - t0)
         return True
 
     def _retire_one(self) -> None:
@@ -685,7 +819,14 @@ class ServeEngine:
         host sync. Lanes whose request turned over since dispatch (stop
         hit, cancel, slot reuse) are dropped by identity check."""
         nxt, lanes = self._tickets.popleft()
+        t0 = time.perf_counter()
         nxt = np.asarray(nxt)  # blocks until the step's results are ready
+        if self.trace is not None:
+            # the sync-wait itself: a long retire right after short
+            # dispatches is the pipeline-bubble signature
+            self.trace.span("retire", cat="engine", t0=t0,
+                            t1=time.perf_counter(), track=ENGINE_TRACK,
+                            lanes=len(lanes), inflight=len(self._tickets))
         self._progress += 1
         for s, req, emits in lanes:
             if not emits:
@@ -724,11 +865,14 @@ class ServeEngine:
                     # slot's last generated token (never prompt[-1] —
                     # prefill already sampled the first token from its own
                     # logits)
+                    ts0 = time.perf_counter()
+                    lanes = 0
                     toks = np.zeros((self.n_slots, 1), np.int32)
                     for s, r in enumerate(self.slot_req):
                         if r is not None:
                             toks[s, 0] = r.out[-1]
                             self.cache.prepare(s, 1)  # paged: draw a page
+                            lanes += 1
                     nxt, _ = self._step(toks)
                     self._decode_steps += 1
                     nxt = np.asarray(nxt)
@@ -738,6 +882,15 @@ class ServeEngine:
                         self.cache.advance(s, 1)
                         self._emit(s, int(nxt[s]))
                         self._progress += 1
+                    if self.trace is not None:
+                        now = time.perf_counter()
+                        self.trace.span("step", cat="engine", t0=ts0, t1=now,
+                                        track=ENGINE_TRACK,
+                                        step=self._decode_steps - 1,
+                                        decode_lanes=lanes,
+                                        **self._cache_deltas())
+                        self.trace.counter("queue_depth",
+                                           self.scheduler.pending(), ts=now)
         finally:
             self._serve_seconds += time.perf_counter() - t0
             self._run_t0 = None
@@ -838,4 +991,10 @@ class ServeEngine:
             "step_ema_s": self.monitor.ema or 0.0,
             "stragglers": self.monitor.stragglers,
             "scheduler": self.scheduler.name,
+            # per-op kernel rollup (kernels/<op>_calls always; _s accumulates
+            # only while a tracer has per-op timing enabled)
+            **self._kstats.op_stats(),
+            # ring-buffer health when a tracer is attached (dropped > 0
+            # means the trace is truncated — resize Tracer(capacity=...))
+            **(self.trace.gauges() if self.trace is not None else {}),
         }

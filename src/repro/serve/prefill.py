@@ -36,6 +36,7 @@ by this request or mapped from a shared page.
 
 from __future__ import annotations
 
+import time
 from typing import Callable, Optional
 
 import jax
@@ -64,7 +65,7 @@ class PrefillCursor:
     ``order`` is the admission sequence number FCFS allotment sorts by.
     """
 
-    __slots__ = ("req", "prompt", "slot", "order", "off")
+    __slots__ = ("req", "prompt", "slot", "order", "off", "chunks")
 
     def __init__(self, req, prompt: np.ndarray, *, slot: int, order: int,
                  off: int = 0):
@@ -73,6 +74,7 @@ class PrefillCursor:
         self.slot = slot
         self.order = order
         self.off = int(off)
+        self.chunks = 0  # chunks taken so far (trace span index)
 
     @property
     def remaining(self) -> int:
@@ -87,6 +89,7 @@ class PrefillCursor:
         n = min(int(n), self.remaining)
         chunk = self.prompt[self.off : self.off + n]
         self.off += n
+        self.chunks += 1
         return chunk
 
 
@@ -109,6 +112,7 @@ class ChunkedPrefill:
         self.chunk = chunk
         self.page_size = page_size
         self.jit_calls = 0  # jitted prefill invocations (the O(S/chunk) claim)
+        self.tracer = None  # set by the engine; chunk spans when attached
         # two traces: non-final chunks only fill the cache (no final-norm /
         # vocab-head matmul); the final chunk also returns last-token logits.
         # `ref` is the request's cache address: slot index (dense) or the
@@ -136,7 +140,8 @@ class ChunkedPrefill:
     def supports(cfg: ArchConfig) -> bool:
         return cfg.family in M.PREFILL_CHUNKABLE_FAMILIES
 
-    def prefill(self, cache, slot: int, prompt: np.ndarray):
+    def prefill(self, cache, slot: int, prompt: np.ndarray, *,
+                rid: Optional[int] = None):
         """Write ``prompt`` into ``slot`` starting at its current position.
         Returns the last real prompt token's logits (1, 1, V). Tokens the
         cache already holds (``cache.pos[slot]`` > 0: a matched shared
@@ -145,8 +150,10 @@ class ChunkedPrefill:
         S = len(prompt)
         logits = None
         off = 0
+        idx = 0
         while off < S:
             n = min(self.chunk, S - off)
+            t0 = time.perf_counter() if self.tracer is not None else 0.0
             toks = np.zeros((1, self.chunk), np.int32)
             toks[0, :n] = prompt[off : off + n]
             cache.prepare(slot, n)  # paged backend draws pages on demand
@@ -164,7 +171,15 @@ class ChunkedPrefill:
                 _, cache.caches = self._fn_mid(*args, cache.caches)
             cache.advance(slot, n)
             self.jit_calls += 1
+            if self.tracer is not None:
+                # host-side chunk cost (build + dispatch; async device work
+                # overlaps) — one span per jitted chunk call
+                self.tracer.span(
+                    f"prefill_chunk[{idx}]", cat="request", t0=t0,
+                    t1=time.perf_counter(), track=slot + 1,
+                    rid=rid, slot=slot, tokens=n)
             off += n
+            idx += 1
         return logits
 
 
@@ -188,12 +203,17 @@ class StepwisePrefill:
         self.n_slots = n_slots
         self.chunk = 1
         self.jit_calls = 0
+        # accepted for interface parity; per-TOKEN chunk spans would flood
+        # the ring (chunk == 1), so the engine-level prefill span is the
+        # stepwise path's trace granularity
+        self.tracer = None
 
     @staticmethod
     def supports(cfg: ArchConfig) -> bool:
         return True
 
-    def prefill(self, cache, slot: int, prompt: np.ndarray):
+    def prefill(self, cache, slot: int, prompt: np.ndarray, *,
+                rid: Optional[int] = None):
         logits = None
         for tok in prompt[int(cache.pos[slot]):]:  # skip the matched prefix
             toks = np.zeros((self.n_slots, 1), np.int32)

@@ -382,6 +382,16 @@ class PrefixCache(PagedKVCache):
             "evictions": self.evictions,
         }
 
+    def counters(self) -> dict:
+        """O(1) monotone counters for per-step trace deltas (see
+        :meth:`~repro.serve.cache.SlotCache.counters`)."""
+        return {
+            **super().counters(),
+            "cow_copies": self.cow_copies,
+            "evictions": self.evictions,
+            "prefix_hits": self.hits,
+        }
+
 
 def _tree_copy(caches, src, dst):
     """Clone pool pages ``src`` -> ``dst`` on every cache leaf. Leaves are

@@ -70,13 +70,37 @@ class LatencyHistogram:
     def mean(self) -> float:
         return self.total / self.n if self.n else 0.0
 
+    def merge(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        """Fold ``other`` into this histogram (bin-wise add) and return self.
+
+        Merging only makes sense between identically-binned histograms —
+        multi-engine/replica aggregation constructs them from the same
+        defaults, so shape mismatch is a caller bug, not a case to resample.
+        The merged percentiles are exactly what a single histogram observing
+        both streams would report; mean/min/max are exact.
+        """
+        if (self.lo, self.hi, self.bins) != (other.lo, other.hi, other.bins):
+            raise ValueError(
+                f"cannot merge histograms with different bin layouts: "
+                f"({self.lo}, {self.hi}, {self.bins}) vs "
+                f"({other.lo}, {other.hi}, {other.bins})")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.n += other.n
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+        return self
+
     def summary(self, prefix: str) -> dict:
         """The ``metrics()`` fragment for this series: p50/p95/p99 + count.
-        (``max`` rides along because SLO reports quote worst-case too.)"""
+        (``max`` and ``mean`` ride along because SLO reports quote both the
+        worst case and the average alongside the tail.)"""
         return {
             f"{prefix}_p50_s": self.percentile(50),
             f"{prefix}_p95_s": self.percentile(95),
             f"{prefix}_p99_s": self.percentile(99),
+            f"{prefix}_mean_s": self.mean,
             f"{prefix}_max_s": self.vmax,
             f"{prefix}_count": self.n,
         }

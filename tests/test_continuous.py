@@ -289,7 +289,8 @@ def test_latency_histogram_contract():
     assert h.n == 5001 and h.mean > 0
     s = h.summary("slo/tpot")
     assert set(s) == {"slo/tpot_p50_s", "slo/tpot_p95_s", "slo/tpot_p99_s",
-                      "slo/tpot_max_s", "slo/tpot_count"}
+                      "slo/tpot_mean_s", "slo/tpot_max_s", "slo/tpot_count"}
+    assert s["slo/tpot_mean_s"] == pytest.approx(h.mean)
     assert s["slo/tpot_count"] == 5001
     # out-of-range observations clamp into the edge bins, never crash; the
     # percentile stays a bin edge (pessimistic) while vmax keeps the truth

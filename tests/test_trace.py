@@ -1,0 +1,436 @@
+"""Observability-layer tests (fast tier): the Tracer's span chains must be
+complete, nested, and non-overlapping for every release path (normal
+completion, max_new=1, stop sequences, mid-decode and queued cancels); the
+Chrome export must be valid ``trace_event`` JSON with per-slot + engine
+tracks; tracing on must leave token streams BIT-IDENTICAL to tracing off
+on all three cache backends (serialized and continuous); the ring buffer
+must stay bounded; the Prometheus exposition must round-trip every
+``metrics()`` key through a real HTTP scrape; and the satellite pieces —
+LatencyHistogram mean/merge, per-op kernel timing — hold their contracts.
+"""
+
+import json
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import get_policy
+from repro.kernels import dispatch
+from repro.models import model as M
+from repro.serve import (
+    LatencyHistogram,
+    MetricsServer,
+    Request,
+    SamplingParams,
+    ServeEngine,
+    Tracer,
+)
+from repro.serve import promexport
+from repro.serve.trace import ENGINE_TRACK, TraceEvent, slot_track
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = configs.reduced(configs.get_arch("internlm2-1.8b"))
+POLICY = get_policy("w4a8")
+
+BACKENDS = {
+    "slot": {},
+    "paged": dict(page_size=8, n_pages=40),
+    "prefix": dict(page_size=8, n_pages=40),
+}
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.key(3), TINY, POLICY, mode="serve")
+
+
+@pytest.fixture(autouse=True)
+def _timing_off():
+    """Engine construction with a tracer flips the process-global per-op
+    kernel timer on; leave no cross-test residue."""
+    yield
+    dispatch.set_timing(False)
+
+
+def _engine(params, *, backend="slot", mixed=False, **kw):
+    return ServeEngine(params, TINY, POLICY, n_slots=2, s_max=48, impl="jnp",
+                       cache=backend, mixed=mixed,
+                       **{**BACKENDS[backend], **kw})
+
+
+def _requests(lengths=(3, 9, 21, 2), seed=0, max_new=None):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(1, TINY.vocab, size=n).astype(np.int32),
+                    max_new=max_new if max_new else 4 + (i % 3))
+            for i, n in enumerate(lengths)]
+
+
+# ------------------------------------------------ satellite: histogram
+
+
+def test_histogram_summary_reports_mean():
+    h = LatencyHistogram()
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    s = h.summary("x")
+    assert s["x_mean_s"] == pytest.approx(0.2)
+    assert s["x_count"] == 3
+    assert LatencyHistogram().summary("x")["x_mean_s"] == 0.0
+
+
+def test_histogram_merge_is_binwise_exact():
+    a, b = LatencyHistogram(), LatencyHistogram()
+    both = LatencyHistogram()
+    rng = np.random.RandomState(7)
+    for i, v in enumerate(rng.lognormal(-3.0, 1.5, size=200)):
+        (a if i % 2 else b).observe(float(v))
+        both.observe(float(v))
+    a.merge(b)
+    assert a.n == both.n
+    assert a.counts == both.counts
+    assert a.total == pytest.approx(both.total)
+    assert a.vmin == both.vmin and a.vmax == both.vmax
+    for q in (50, 95, 99):
+        assert a.percentile(q) == both.percentile(q)
+
+
+def test_histogram_merge_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="bin layouts"):
+        LatencyHistogram().merge(LatencyHistogram(bins=32))
+
+
+# ------------------------------------------------ tracer unit contracts
+
+
+def test_ring_buffer_bounded_and_drop_counted():
+    tr = Tracer(capacity=8)
+    for i in range(100):
+        tr.instant(f"e{i}", cat="engine")
+    assert len(tr.events()) == 8
+    assert tr.emitted == 100
+    assert tr.dropped == 92
+    assert tr.gauges()["trace/events_dropped"] == 92
+    # the ring keeps the NEWEST events
+    assert [e.name for e in tr.events()] == [f"e{i}" for i in range(92, 100)]
+
+
+def test_span_clamps_negative_duration():
+    tr = Tracer()
+    tr.span("s", cat="engine", t0=2.0, t1=1.0)
+    assert tr.events()[0].dur == 0.0
+
+
+def test_jsonl_export_round_trips(tmp_path):
+    tr = Tracer()
+    tr.span("work", cat="request", t0=tr.t0, t1=tr.t0 + 0.5, track=1, rid=3)
+    tr.instant("mark", cat="engine")
+    path = tr.export_jsonl(tmp_path / "t.jsonl")
+    lines = [json.loads(ln) for ln in open(path)]
+    assert len(lines) == 2
+    assert lines[0] == {"name": "work", "cat": "request", "ph": "X",
+                        "ts": 0.0, "dur": 0.5, "track": 1,
+                        "args": {"rid": 3}}
+
+
+def test_check_request_spans_catches_missing_and_overlap():
+    tr = Tracer()
+    t = tr.t0
+    # missing release
+    tr.span("request", cat="request", t0=t, t1=t + 1, track=1, rid=0)
+    with pytest.raises(ValueError, match="missing 'release'"):
+        tr.check_request_spans()
+    tr.instant("release", cat="request", track=1, ts=t + 1, rid=0,
+               status="done")
+    tr.check_request_spans()
+    # overlap: queued ends after first_token
+    tr2 = Tracer()
+    tr2.span("queued", cat="request", t0=t, t1=t + 2, track=1, rid=1)
+    tr2.instant("first_token", cat="request", track=1, ts=t + 1, rid=1)
+    tr2.span("decode", cat="request", t0=t + 1, t1=t + 3, track=1, rid=1)
+    tr2.span("request", cat="request", t0=t, t1=t + 3, track=1, rid=1)
+    tr2.instant("release", cat="request", track=1, ts=t + 3, rid=1,
+                status="done")
+    with pytest.raises(ValueError, match="overlaps"):
+        tr2.check_request_spans()
+    # unknown rid
+    with pytest.raises(ValueError, match="no trace events"):
+        tr.check_request_spans([99])
+
+
+# ------------------------------------------------ engine span emission
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@pytest.mark.parametrize("mixed", [False, True])
+def test_span_chain_complete_and_nested(params, backend, mixed):
+    tr = Tracer()
+    eng = _engine(params, backend=backend, mixed=mixed, trace=tr,
+                  prefill_chunk=4, **(dict(mixed_budget=4) if mixed else {}))
+    reqs = _requests()
+    eng.run(reqs)
+    assert tr.check_request_spans([r.rid for r in reqs]) == len(reqs)
+    # request spans end at the stamped release time
+    for rid, evs in tr.request_events().items():
+        req = next(e for e in evs if e.name == "request" and e.ph == "X")
+        rel = next(e for e in evs if e.name == "release")
+        assert rel.args["status"] == "done"
+        assert req.end == pytest.approx(rel.ts)
+
+
+def test_span_chain_max_new_1(params):
+    """A max_new=1 request's only token IS its first token: the chain must
+    still be complete (first_token from the prefill logits, zero-length
+    decode window)."""
+    tr = Tracer()
+    eng = _engine(params, trace=tr)
+    eng.run(_requests(lengths=(3, 5), max_new=1))
+    assert tr.check_request_spans([0, 1]) == 2
+
+
+def test_span_chain_stop_sequence(params):
+    # find the real first tokens to build a stop sequence that hits
+    ref = _engine(params)
+    rh = ref.submit(np.arange(1, 8, dtype=np.int32),
+                    SamplingParams(max_new=16))
+    ref.drain()
+    stop = [rh.result()[:2]]
+    tr = Tracer()
+    eng = _engine(params, trace=tr)
+    h2 = eng.submit(np.arange(1, 8, dtype=np.int32),
+                    SamplingParams(max_new=16, stop=stop))
+    eng.drain()
+    assert h2.status == "stopped"
+    evs = tr.request_events()[h2.rid]
+    rel = next(e for e in evs if e.name == "release")
+    assert rel.args["status"] == "stopped"
+    tr.check_request_spans([h2.rid])
+
+
+def test_span_chain_cancelled_exits(params):
+    """Cancellation through every path keeps the trace complete: queued
+    cancel (never admitted — terminal events on the engine track), and
+    mid-decode cancel (full chain, release status cancelled)."""
+    tr = Tracer()
+    eng = _engine(params, trace=tr)
+    # fill both slots, third stays queued
+    hs = [eng.submit(np.arange(1, 5, dtype=np.int32),
+                     SamplingParams(max_new=8)) for _ in range(3)]
+    eng.step()
+    assert hs[2].status == "queued"
+    hs[2].cancel()
+    evs = tr.request_events()[hs[2].rid]
+    assert all(e.track == ENGINE_TRACK for e in evs)
+    assert next(e for e in evs if e.name == "release").args["status"] == \
+        "cancelled"
+    # mid-decode cancel
+    for tok in hs[0].tokens():
+        if len(hs[0].request.out) >= 2:
+            hs[0].cancel()
+    eng.drain()
+    rel = next(e for e in tr.request_events()[hs[0].rid]
+               if e.name == "release")
+    assert rel.args["status"] == "cancelled"
+    tr.check_request_spans([h.rid for h in hs])
+
+
+def test_first_token_instant_on_slot_track(params):
+    tr = Tracer()
+    eng = _engine(params, trace=tr)
+    reqs = _requests(lengths=(3, 5))
+    eng.run(reqs)
+    for rid, evs in tr.request_events().items():
+        first = next(e for e in evs if e.name == "first_token")
+        queued = next(e for e in evs if e.name == "queued")
+        assert first.track == queued.track != ENGINE_TRACK
+
+
+def test_engine_step_events_emitted(params):
+    tr = Tracer()
+    eng = _engine(params, mixed=True, mixed_budget=4, prefill_chunk=4,
+                  backend="paged", trace=tr)
+    eng.run(_requests())
+    names = {e.name for e in tr.events() if e.cat == "engine"}
+    assert "mixed_step" in names and "retire" in names
+    # dispatch spans carry the budget split
+    ms = next(e for e in tr.events() if e.name == "mixed_step")
+    for key in ("step", "decode_lanes", "prefill_lanes", "prefill_tokens",
+                "budget", "inflight"):
+        assert key in ms.args, key
+    # the paged backend's page draws are attributed to steps
+    drawn = sum(e.args.get("pages_drawn", 0) for e in tr.events()
+                if e.cat == "engine" and e.ph == "X")
+    assert drawn == eng.metrics()["cache/pages_drawn"]
+    # counter samples for the Perfetto counter track
+    assert any(e.ph == "C" and e.name == "inflight" for e in tr.events())
+
+
+def test_prefill_chunk_spans(params):
+    """A 3-chunk prompt produces sequential chunk spans inside the prefill
+    span — serialized (emitted by ChunkedPrefill) and continuous (emitted
+    per mixed-step allotment)."""
+    for mixed in (False, True):
+        tr = Tracer()
+        eng = _engine(params, trace=tr, prefill_chunk=4, mixed=mixed,
+                      **(dict(mixed_budget=4) if mixed else {}))
+        eng.run(_requests(lengths=(11,)))
+        evs = tr.request_events()[0]
+        chunks = sorted((e for e in evs
+                         if e.name.startswith("prefill_chunk[")),
+                        key=lambda e: e.ts)
+        assert [e.name for e in chunks] == [f"prefill_chunk[{i}]"
+                                            for i in range(3)]
+        assert sum(e.args["tokens"] for e in chunks) == 11
+        prefill = next(e for e in evs if e.name == "prefill" and e.ph == "X")
+        eps = 1e-9
+        for c in chunks:
+            assert c.ts >= prefill.ts - eps and c.end <= prefill.end + eps
+
+
+# ------------------------------------------------ bit-exactness on/off
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+@pytest.mark.parametrize("mixed", [False, True])
+def test_tokens_bit_identical_tracing_on_vs_off(params, backend, mixed):
+    kw = dict(backend=backend, mixed=mixed, prefill_chunk=4,
+              **(dict(mixed_budget=4) if mixed else {}))
+    out_off = _engine(params, **kw).run(_requests())
+    out_on = _engine(params, trace=Tracer(), **kw).run(_requests())
+    assert out_on == out_off
+
+
+# ------------------------------------------------ Chrome export
+
+
+def _chrome_doc(params, backend):
+    tr = Tracer()
+    eng = _engine(params, backend=backend, mixed=True, mixed_budget=4,
+                  prefill_chunk=4, trace=tr)
+    eng.run(_requests())
+    return tr.to_chrome(), eng
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_chrome_export_schema(params, backend, tmp_path):
+    doc, eng = _chrome_doc(params, backend)
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    tids = set()
+    for ev in doc["traceEvents"]:
+        # trace_event required fields per phase
+        assert ev["ph"] in ("X", "i", "C", "M")
+        assert isinstance(ev["name"], str) and ev["name"]
+        assert ev["pid"] == 0 and isinstance(ev["tid"], int)
+        if ev["ph"] == "M":
+            continue
+        assert isinstance(ev["ts"], float) and ev["ts"] >= 0.0
+        tids.add(ev["tid"])
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+        if ev["ph"] == "i":
+            assert ev["s"] == "t"
+    # one engine-pipeline track + a track per slot that served a request
+    assert ENGINE_TRACK in tids
+    assert {slot_track(s) for s in range(eng.n_slots)} <= tids
+    # thread names label every used track
+    named = {ev["tid"]: ev["args"]["name"] for ev in doc["traceEvents"]
+             if ev.get("ph") == "M" and ev["name"] == "thread_name"}
+    assert named[ENGINE_TRACK] == "engine pipeline"
+    assert named[slot_track(0)] == "slot 0"
+    assert tids <= set(named)
+    # the file form is valid JSON
+    tr2 = Tracer()
+    tr2.instant("x", cat="engine")
+    path = tr2.export_chrome(tmp_path / "trace.json")
+    assert json.load(open(path))["traceEvents"]
+
+
+def test_chrome_timestamps_are_microseconds_from_t0(params):
+    tr = Tracer()
+    ev = TraceEvent("s", "engine", "X", tr.t0 + 0.001, 0.002)
+    tr.emit(ev)
+    rec = [e for e in tr.to_chrome()["traceEvents"] if e["ph"] == "X"][0]
+    assert rec["ts"] == pytest.approx(1000.0)
+    assert rec["dur"] == pytest.approx(2000.0)
+
+
+# ------------------------------------------------ kernel timing
+
+
+def test_kernel_timing_accumulates_only_when_enabled(params):
+    prior = dispatch.set_timing(False)
+    try:
+        base = dict(dispatch.DISPATCH_SECONDS)
+        _engine(params).run(_requests(lengths=(3,)))
+        assert dict(dispatch.DISPATCH_SECONDS) == base  # off: untouched
+        eng = _engine(params, trace=Tracer())
+        eng.run(_requests(lengths=(3,)))
+        m = eng.metrics()
+        assert m["kernels/mpmm_calls"] > 0
+        assert m["kernels/mpmm_s"] > 0.0
+    finally:
+        dispatch.set_timing(prior)
+
+
+def test_kernel_op_stats_in_metrics_without_tracer(params):
+    eng = _engine(params)
+    eng.run(_requests(lengths=(3,)))
+    m = eng.metrics()
+    # calls are counted regardless; seconds stay zero with timing off
+    assert m["kernels/mpmm_calls"] > 0
+    assert m["kernels/mpmm_s"] == 0.0
+    assert "trace/events_emitted" not in m  # no tracer, no trace gauges
+
+
+# ------------------------------------------------ Prometheus exposition
+
+
+def test_prom_round_trips_every_metrics_key(params):
+    tr = Tracer()
+    eng = _engine(params, backend="prefix", mixed=True, mixed_budget=4,
+                  prefill_chunk=4, trace=tr)
+    eng.run(_requests())
+    m = eng.metrics()
+    back = promexport.parse(promexport.render(m))
+    assert set(back) == set(m)
+    for k, v in m.items():
+        if isinstance(v, str):
+            assert back[k] == v
+        else:
+            assert back[k] == float(v)
+
+
+def test_prom_escapes_label_values():
+    m = {'weird/key with "quotes"': 'a\\b\n"c"', "n": 1}
+    back = promexport.parse(promexport.render(m))
+    assert back == {'weird/key with "quotes"': 'a\\b\n"c"', "n": 1.0}
+
+
+def test_prom_render_shape():
+    text = promexport.render({"slo/ttft_p50_s": 0.25, "mode": "continuous"})
+    assert '# TYPE repro_slo_ttft_p50_s gauge' in text
+    assert 'repro_slo_ttft_p50_s{key="slo/ttft_p50_s"} 0.25' in text
+    assert 'repro_info{key="mode",value="continuous"} 1' in text
+
+
+def test_metrics_server_scrape(params, tmp_path):
+    eng = _engine(params)
+    eng.run(_requests(lengths=(3,)))
+    srv = MetricsServer(eng.metrics, port=0)
+    try:
+        body = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        back = promexport.parse(body)
+        assert back["requests_completed"] == 1.0
+        assert back["mode"] == "serialized"
+        with pytest.raises(Exception):
+            urllib.request.urlopen(srv.url.replace("/metrics", "/nope"),
+                                   timeout=10)
+    finally:
+        srv.close()
+    # the no-socket file dump renders the same exposition
+    path = promexport.write_exposition(tmp_path / "m.prom", eng.metrics())
+    assert promexport.parse(open(path).read())["mode"] == "serialized"
