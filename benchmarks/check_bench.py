@@ -213,7 +213,48 @@ def check_lm_serving(out_dir: pathlib.Path, tuned_dir: pathlib.Path,
                     f"lm_serving/{r['name']}: {r.get('pages_leaked')} pages "
                     f"still live after drain (cancellation leak)")
 
-    # 7. fused decode attention: every KV precision covered, engine tokens
+    # 7. speculative decoding: the self-draft row on every cache backend
+    # plus the separate-draft-model row, ALL bit-exact vs the
+    # non-speculative engine (greedy and seeded — the determinism
+    # contract), and the gated self4 rows must hold the decode-throughput
+    # claim (identity draft -> full acceptance -> the call-amortization
+    # win is real, not a lucky acceptance pattern)
+    spec = {(r["draft"], r["backend"]): r for r in rows
+            if r.get("kind") == "spec_serving"}
+    want_spec = {("self4", b) for b in lm_serving.SPEC_BACKENDS}
+    want_spec.add(("draft", "paged"))
+    missing_spec = want_spec - set(spec)
+    if missing_spec:
+        errors.append(
+            f"lm_serving: missing spec_serving rows: {sorted(missing_spec)}")
+    for key, r in sorted(spec.items()):
+        if not r.get("tokens_match_greedy"):
+            errors.append(
+                f"lm_serving/{r['name']}: speculative greedy decode "
+                f"diverged from the non-speculative engine")
+        if not r.get("tokens_match_seeded"):
+            errors.append(
+                f"lm_serving/{r['name']}: speculative seeded decode "
+                f"diverged from the non-speculative engine")
+        if not 0.0 <= r.get("acceptance_rate", -1.0) <= 1.0:
+            errors.append(
+                f"lm_serving/{r['name']}: acceptance rate "
+                f"{r.get('acceptance_rate')} outside [0, 1]")
+        if r.get("gated"):
+            if r.get("acceptance_rate") != 1.0:
+                errors.append(
+                    f"lm_serving/{r['name']}: w4a8 self-draft acceptance "
+                    f"{r.get('acceptance_rate')} != 1.0 — the identity "
+                    f"requantize no longer aliases the target")
+            if r["decode_speedup"] < lm_serving.MIN_SPEC_DECODE_SPEEDUP:
+                errors.append(
+                    f"lm_serving/{r['name']}: speculative decode speedup "
+                    f"{r['decode_speedup']:.2f}x < "
+                    f"{lm_serving.MIN_SPEC_DECODE_SPEEDUP}x at "
+                    f"spec_k={r['spec_k']} ({r['tokens_per_s_spec']:.1f} "
+                    f"vs {r['tokens_per_s_base']:.1f} tokens/s)")
+
+    # 8. fused decode attention: every KV precision covered, engine tokens
     # bit-exact with the fused flag, the in-process fused-vs-unfused step
     # time holds the speedup claim at 8/4-bit KV, and the tuned dense-view
     # block size matches the checked-in winner (tiles provenance + the

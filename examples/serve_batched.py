@@ -88,6 +88,17 @@ def main():
                          "ahead-of-time — tokens stay bit-identical to "
                          "the default serialized loop (watch mixed_steps "
                          "in the metrics line)")
+    ap.add_argument("--spec", default="off",
+                    choices=("off", "self4", "draft"),
+                    help="speculative decoding: self4 = draft with the "
+                         "target model re-dispatched at 4-bit weights "
+                         "(zero extra weights, shared KV cache), draft = "
+                         "a separate small draft model — accepted streams "
+                         "stay bit-identical to --spec off (watch the "
+                         "spec/ metrics line)")
+    ap.add_argument("--spec-k", type=int, default=4, metavar="K",
+                    help="drafted tokens per speculation round (a round "
+                         "retires 1..K+1 tokens)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record request-lifecycle + engine-step spans and "
                          "write a Chrome/Perfetto trace_event JSON here "
@@ -108,7 +119,8 @@ def main():
                       prefill=args.prefill, prefill_chunk=args.chunk,
                       cache=args.cache, page_size=args.page_size,
                       fused_attn=args.fused_attn, mixed=args.mixed,
-                      trace=tracer)
+                      spec=None if args.spec == "off" else args.spec,
+                      spec_k=args.spec_k, trace=tracer)
     rng = np.random.RandomState(0)
     system = rng.randint(1, cfg.vocab, size=args.shared_prefix).astype(np.int32)
     prompts = [np.concatenate(
@@ -154,6 +166,13 @@ def main():
           f"stopped={m['stopped_on_sequence']} "
           f"deadline_misses={m['deadline_misses']} "
           f"slot_resets={m['slot_resets']} stragglers={m['stragglers']}")
+    if m["spec/enabled"]:
+        print(f"spec: policy={m['spec/policy']} k={m['spec/k']} "
+              f"rounds={m['spec/rounds']} "
+              f"accepted={m['spec/accepted']}/{m['spec/proposed']} "
+              f"(rate={m['spec/acceptance_rate']:.2f}) "
+              f"accepted_len p50={m['spec/accepted_len_p50_s']:.1f} "
+              f"truncates={m['cache/truncates']}")
     if m["cache/backend"] in ("paged", "prefix"):
         print(f"{m['cache/backend']} cache: page_size={m['cache/page_size']} "
               f"pages={m['cache/pages_free']}/{m['cache/pages_total']} free "

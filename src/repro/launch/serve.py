@@ -43,6 +43,15 @@ def main():
     ap.add_argument("--mixed-budget", type=int, default=None,
                     help="prefill tokens folded into each mixed step "
                          "(default: the prefill chunk size)")
+    ap.add_argument("--spec", default="off",
+                    choices=("off", "self4", "draft"),
+                    help="speculative decoding: self4 drafts with the "
+                         "target model at 4-bit weights (zero extra "
+                         "weights, shared KV cache), draft uses a separate "
+                         "small model; accepted streams are bit-identical "
+                         "to --spec off")
+    ap.add_argument("--spec-k", type=int, default=4, metavar="K",
+                    help="drafted tokens per speculation round")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy decode")
     ap.add_argument("--top-k", type=int, default=0)
@@ -72,7 +81,9 @@ def main():
                       scheduler=args.scheduler, prefill=args.prefill,
                       prefill_chunk=args.prefill_chunk, cache=args.cache,
                       page_size=args.page_size, mixed=args.mixed,
-                      mixed_budget=args.mixed_budget, trace=tracer)
+                      mixed_budget=args.mixed_budget,
+                      spec=None if args.spec == "off" else args.spec,
+                      spec_k=args.spec_k, trace=tracer)
     metrics_srv = maybe_serve(eng.metrics, args.metrics_port)
     if metrics_srv is not None:
         print(f"metrics: {metrics_srv.url}")
@@ -96,6 +107,12 @@ def main():
           f"tokens/s {m['tokens_per_s']:.1f}; "
           f"step ema {m['step_ema_s'] * 1e3:.1f} ms; "
           f"stragglers {m['stragglers']}")
+    if m["spec/enabled"]:
+        print(f"spec: policy={m['spec/policy']} k={m['spec/k']} "
+              f"rounds={m['spec/rounds']} "
+              f"accepted={m['spec/accepted']}/{m['spec/proposed']} "
+              f"(rate={m['spec/acceptance_rate']:.2f}) "
+              f"truncates={m['cache/truncates']}")
     if tracer is not None:
         tracer.check_request_spans(h.rid for h in handles)
         if args.trace:

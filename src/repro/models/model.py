@@ -915,3 +915,91 @@ def mixed_step(params: dict, tokens: jax.Array, pos: jax.Array,
                                              mode="drop"),
             new_caches)
     return logits, new_caches
+
+
+def spec_verify_step(params: dict, tokens: jax.Array, pos: jax.Array,
+                     n_real: jax.Array, temps: jax.Array, top_ks: jax.Array,
+                     top_ps: jax.Array, seeds: jax.Array, counters: jax.Array,
+                     caches: list, cfg: ArchConfig, policy: PrecisionPolicy, *,
+                     impl: ops.Impl = "auto",
+                     block_tables: Optional[jax.Array] = None,
+                     page_size: Optional[int] = None):
+    """Speculative-decoding VERIFY: the target model scores a whole drafted
+    window in ONE jitted call. Lane b of ``tokens`` (B, W = k+1) is
+    ``[last_emitted, draft_0, .., draft_{k-1}]`` for a speculating lane
+    (``n_real[b] == W``), a plain right-padded 1-token decode lane
+    (``n_real[b] == 1``), or idle (0). The forward is :func:`mixed_step`'s
+    (``attend_cached`` through the shared cache, per-lane pad scrub after),
+    with two differences:
+
+    - the head runs over ALL W positions (W is small — k+1, not a prefill
+      chunk), because verification needs a target token at every offset;
+    - sampling is fused in-jit through :func:`sample_tokens`'s counter-based
+      PRNG: offset j of lane b draws at counter ``counters[b] + j`` — the
+      exact (seed, counter) cell the serialized engine would use for that
+      emission index, which is what makes accepted streams bit-identical to
+      the non-speculative engine (greedy AND seeded) on every backend.
+
+    Returns (targets (B, W) int32, new_caches). The caller accepts the
+    longest prefix where draft_j == targets[:, j] host-side, emits
+    ``targets[:, 0..m]`` (the bonus token rides at the first mismatch), and
+    rolls back rejected rows via the cache-manager ``truncate`` verb.
+    Pad/idle offsets return garbage tokens the caller never reads.
+    """
+    if cfg.family not in PREFILL_CHUNKABLE_FAMILIES:
+        raise NotImplementedError(
+            f"speculative verify unsupported for family {cfg.family!r} "
+            f"(supported: {PREFILL_CHUNKABLE_FAMILIES}); these families "
+            f"lack the position-indexed cache the multi-token write needs")
+    if block_tables is not None and page_size is None:
+        raise ValueError("page_size is required with block_tables")
+    _, nfn = _norm_fns(cfg)
+    mode = "serve"
+    x = embed_apply(params["embed"], tokens).astype(jnp.bfloat16)
+    B, W = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    n_real = jnp.asarray(n_real, jnp.int32)
+    pos_ids = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None]
+    x, new_caches, _ = _run_stack(params, x, pos_ids, cfg, policy, mode=mode,
+                                  impl=impl, caches=caches, cache_pos=pos,
+                                  remat=False, attend_cached=True,
+                                  block_tables=block_tables)
+    x = nfn(params["final_norm"], x)
+    logits = linear_apply(params["head"], x, policy.of("head"), mode=mode,
+                          impl=impl)                              # (B, W, V)
+
+    # fused rejection sampling: offset j of lane b is emission index
+    # counters[b] + j of its request — flatten to (B*W,) lanes and let the
+    # batched sampler draw every candidate from its own counter cell
+    flat = logits.reshape(B * W, -1)
+    ctr = (counters[:, None] + jnp.arange(W, dtype=jnp.int32)[None])
+    targets = sample_tokens(
+        flat, jnp.repeat(temps, W), jnp.repeat(top_ks, W),
+        jnp.repeat(top_ps, W), jnp.repeat(seeds, W),
+        ctr.reshape(-1)).reshape(B, W)
+
+    # per-lane pad scrub, verbatim from mixed_step: no stale K/V beyond a
+    # lane's real rows (rejected rows are rolled back by truncate, which
+    # scrubs separately — this handles pad lanes and idle lanes)
+    row_idx = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None]   # (B, W)
+    pad = jnp.arange(W, dtype=jnp.int32)[None] >= n_real[:, None]   # (B, W)
+    if block_tables is None:
+        scrub_idx = jnp.where(pad, row_idx, jnp.int32(2**30))
+        b_ix = jnp.arange(B, dtype=jnp.int32)[:, None]
+        new_caches = jax.tree.map(
+            lambda a: a.at[:, b_ix, scrub_idx].set(jnp.zeros((), a.dtype),
+                                                   mode="drop"),
+            new_caches)
+    else:
+        nb = block_tables.shape[1]
+        blk = row_idx // page_size
+        off = row_idx % page_size
+        page = jnp.take_along_axis(block_tables, jnp.minimum(blk, nb - 1),
+                                   axis=1)
+        page = jnp.where(pad & (blk < nb) & (page != 0), page,
+                         jnp.int32(2**30))
+        new_caches = jax.tree.map(
+            lambda a: a.at[:, page, off].set(jnp.zeros((), a.dtype),
+                                             mode="drop"),
+            new_caches)
+    return targets, new_caches

@@ -25,6 +25,9 @@ Layering (each module owns one concern; the engine only composes):
   * :mod:`repro.serve.promexport` — Prometheus text exposition of
     ``metrics()`` (render/parse/file dump + the stdlib ``MetricsServer``
     scrape endpoint),
+  * :mod:`repro.serve.spec`      — speculative decoding draft policies
+    (``SelfDraft``: the target at 4-bit weights via the kernel matrix;
+    ``DraftModel``: a separate small model; ``ServeEngine(spec=...)``),
   * :mod:`repro.serve.engine`    — the decode+sample loop
     (submit/step/drain/close, batch-compat run()): serialized mode, or
     continuous batching (mixed prefill+decode steps with ahead-of-time
@@ -49,6 +52,13 @@ from repro.serve.prefill import (
 )
 from repro.serve.prefix import PrefixCache
 from repro.serve.promexport import MetricsServer, write_exposition
+from repro.serve.spec import (
+    SPEC_POLICIES,
+    DraftModel,
+    DraftPolicy,
+    SelfDraft,
+    make_spec,
+)
 from repro.serve.stats import LatencyHistogram
 from repro.serve.trace import TraceEvent, Tracer
 from repro.serve.scheduler import (
@@ -70,4 +80,5 @@ __all__ = [
     "SCHEDULERS", "BestFitScheduler", "FCFSScheduler", "PriorityScheduler",
     "Scheduler", "ShortestPromptFirstScheduler", "make_scheduler",
     "MetricsServer", "TraceEvent", "Tracer", "write_exposition",
+    "SPEC_POLICIES", "DraftModel", "DraftPolicy", "SelfDraft", "make_spec",
 ]

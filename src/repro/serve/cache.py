@@ -91,6 +91,29 @@ def _zero_pages(caches, pages):
         lambda a: a.at[:, pages].set(jnp.zeros((), a.dtype)), caches)
 
 
+@functools.partial(jax.jit, donate_argnums=0)
+def _zero_slot_rows(caches, slot, rows):
+    """Zero token rows ``rows`` of dense-cache slot ``slot``. ``rows`` is a
+    fixed-length traced int32 vector padded with out-of-range sentinels
+    (2**30) whose writes ``mode="drop"`` discards, so one compiled program
+    per pad length serves every truncate."""
+    return jax.tree.map(
+        lambda a: a.at[:, slot, rows].set(jnp.zeros((), a.dtype),
+                                          mode="drop"), caches)
+
+
+@functools.partial(jax.jit, donate_argnums=0)
+def _zero_page_tail(caches, page, start):
+    """Zero in-page offsets [start, page_size) of pool page ``page`` —
+    the partial-page half of a paged truncate. Offsets below ``start`` are
+    redirected to an out-of-range page id and dropped."""
+    def scrub(a):
+        off = jnp.arange(a.shape[2])
+        p = jnp.where(off >= start, page, 2**30)
+        return a.at[:, p, off].set(jnp.zeros((), a.dtype), mode="drop")
+    return jax.tree.map(scrub, caches)
+
+
 def _tree_bytes(caches) -> int:
     """Total storage bytes across every cache leaf."""
     return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(caches))
@@ -118,6 +141,7 @@ class SlotCache:
         self.caches = M.init_cache(cfg, policy, n_slots, s_max)
         self.pos = np.zeros(n_slots, np.int32)  # next write position per slot
         self.resets = 0  # explicit slot recycles (metrics)
+        self.truncates = 0  # speculative-rollback rewinds (metrics)
         self._busy = [False] * n_slots
 
     # --- occupancy ---------------------------------------------------------
@@ -181,6 +205,31 @@ class SlotCache:
     def advance(self, slot: int, n: int) -> None:
         self.pos[slot] += n
 
+    def truncate(self, slot: int, n: int) -> None:
+        """Rewind the write frontier by ``n`` rows and zero the abandoned
+        rows — the speculative-decoding rollback verb (rejected draft
+        tokens must not leave stale K/V behind; same no-stale-rows
+        guarantee as :meth:`reset_slot`, scoped to the tail). ``n <= 0``
+        is a no-op (a fully accepted speculation rolls nothing back)."""
+        if n <= 0:
+            return
+        new_pos = int(self.pos[slot]) - n
+        if new_pos < 0:
+            raise ValueError(
+                f"slot {slot}: cannot truncate {n} rows below position "
+                f"{int(self.pos[slot])}")
+        # pad the row list to a power-of-two length so the jitted scrub
+        # compiles O(log s_max) programs, not one per n
+        width = 1
+        while width < n:
+            width *= 2
+        rows = np.full(width, 2**30, np.int32)
+        rows[:n] = np.arange(new_pos, new_pos + n)
+        self.caches = _zero_slot_rows(self.caches, jnp.int32(slot),
+                                      jnp.asarray(rows))
+        self.pos[slot] = new_pos
+        self.truncates += 1
+
     def commit(self, slot: int, prompt) -> None:
         """Publish a freshly prefilled prompt to the prefix-sharing index so
         later requests can reuse its pages. A no-op on non-sharing backends;
@@ -204,6 +253,7 @@ class SlotCache:
         total = _tree_bytes(self.caches)
         return {
             "backend": "slot",
+            "truncates": self.truncates,
             "kv_bytes_total": total,
             "kv_bytes_per_token": total / (self.n_slots * self.s_max),
         }
@@ -213,7 +263,7 @@ class SlotCache:
         walk. The tracing engine diffs consecutive snapshots to attribute
         page draws / COW copies / evictions to individual steps; ``stats()``
         stays the full (costlier) health snapshot for ``metrics()``."""
-        return {"resets": self.resets}
+        return {"resets": self.resets, "truncates": self.truncates}
 
 
 class PagedKVCache:
@@ -261,6 +311,7 @@ class PagedKVCache:
         self.block_tables = np.zeros((n_slots, self.n_blocks), np.int32)
         self.pos = np.zeros(n_slots, np.int32)
         self.resets = 0
+        self.truncates = 0  # speculative-rollback rewinds (metrics)
         self._busy = [False] * n_slots
         self._alloc = np.zeros(n_slots, np.int32)     # blocks mapped per slot
         self._shared = np.zeros(n_slots, np.int32)    # of those, shared pages
@@ -427,6 +478,44 @@ class PagedKVCache:
     def advance(self, slot: int, n: int) -> None:
         self.pos[slot] += n
 
+    def truncate(self, slot: int, n: int) -> None:
+        """Page-aligned rollback: rewind the write frontier by ``n`` rows,
+        RELEASE pages the new frontier no longer touches (decref — a page
+        another reader still holds stays resident and bit-frozen), and zero
+        the abandoned tail of the last kept page in place. The in-place
+        scrub demands sole ownership: the engine only ever truncates
+        speculative rows it wrote itself this round (never committed-prefix
+        rows), so a shared last page is an accounting bug, not a COW site.
+        ``n <= 0`` is a no-op. Reservations are untouched — a rolled-back
+        slot re-draws within its admission promise."""
+        if n <= 0:
+            return
+        pos = int(self.pos[slot])
+        new_pos = pos - n
+        if new_pos < 0:
+            raise ValueError(
+                f"slot {slot}: cannot truncate {n} rows below position {pos}")
+        keep = self.pages_for(new_pos)
+        n_alloc = int(self._alloc[slot])
+        if keep < n_alloc:
+            self._release_pages(self.block_tables[slot, keep:n_alloc])
+            self.block_tables[slot, keep:n_alloc] = 0
+            self._alloc[slot] = keep
+        if keep:
+            rem = new_pos - (keep - 1) * self.page_size
+            if rem < self.page_size:
+                page = int(self.block_tables[slot, keep - 1])
+                if self._ref[page] > 1:
+                    raise RuntimeError(
+                        f"truncate would scrub page {page} with "
+                        f"{int(self._ref[page])} readers — speculative rows "
+                        f"must never land on shared pages")
+                if page != 0:
+                    self.caches = _zero_page_tail(
+                        self.caches, jnp.int32(page), jnp.int32(rem))
+        self.pos[slot] = new_pos
+        self.truncates += 1
+
     def commit(self, slot: int, prompt) -> None:
         """Sharing-index publication hook (manager contract; the engine
         calls it after every prefill). No index on this backend — no-op."""
@@ -470,6 +559,7 @@ class PagedKVCache:
             "pages_live": self.pages_live(),
             "pages_available": self.pages_available(),
             "pages_drawn": self.pages_drawn,
+            "truncates": self.truncates,
             "page_utilization": util,
             "page_fragmentation": 1.0 - util,
             "kv_bytes_total": total,
@@ -479,7 +569,8 @@ class PagedKVCache:
     def counters(self) -> dict:
         """O(1) monotone counters for per-step trace deltas (see
         :meth:`SlotCache.counters`)."""
-        return {"resets": self.resets, "pages_drawn": self.pages_drawn}
+        return {"resets": self.resets, "pages_drawn": self.pages_drawn,
+                "truncates": self.truncates}
 
 
 CACHE_BACKENDS: dict[str, type] = {

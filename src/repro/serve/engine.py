@@ -98,6 +98,7 @@ from repro.serve.boundary import SnapshotRing, host_copy
 from repro.serve.cache import PagedKVCache, SlotCache, make_cache
 from repro.serve.prefill import ChunkedPrefill, PrefillCursor, make_prefiller
 from repro.serve.scheduler import Scheduler, make_scheduler
+from repro.serve.spec import DraftPolicy, make_spec
 from repro.serve.stats import LatencyHistogram
 from repro.serve.trace import ENGINE_TRACK, Tracer, slot_track
 
@@ -193,6 +194,8 @@ class ServeEngine:
                  mixed: bool = False,
                  mixed_budget: Optional[int] = None,
                  inflight: int = 2,
+                 spec: Union[str, DraftPolicy, None] = None,
+                 spec_k: int = 4,
                  trace: Optional[Tracer] = None):
         self.params, self.cfg, self.policy = params, cfg, policy
         #: optional event sink (serve/trace.py). None = zero overhead: every
@@ -323,6 +326,69 @@ class ServeEngine:
             else:
                 self._mixed = jax.jit(mixed_and_sample)
                 self._chain_decode = jax.jit(chain_and_sample)
+
+        # --- speculative decoding (serve/spec.py) --------------------------
+        self.spec = make_spec(spec)
+        self.spec_k = int(spec_k)
+        self._spec_rounds = 0
+        self._spec_proposed = 0
+        self._spec_accepted = 0
+        self._h_spec_len = LatencyHistogram()
+        if self.spec is not None:
+            if self.mixed:
+                raise ValueError(
+                    "spec and mixed are mutually exclusive: acceptance makes "
+                    "the tokens a step retires dynamic (1..k+1), which "
+                    "ahead-of-time dispatch cannot express — its in-flight "
+                    "steps pre-commit counters and chain inputs")
+            if self.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+            self.spec.build(self)
+            k = self.spec_k
+            dcfg, dpolicy = self.spec.cfg, self.spec.policy
+
+            def draft_loop(p, tok0, pos, caches, samp, bt=None):
+                # k chained draft steps in ONE jit (lax.scan): step j writes
+                # cache row pos+j and samples at counter+j — the exact PRNG
+                # cell verify scores at offset j, so a draft whose logits
+                # match the target's is always accepted. fused_attn stays
+                # off: drafts must track the (unfused) verify numerics, and
+                # a ulp drift here costs acceptance for nothing.
+                temps, top_ks, top_ps, seeds, counters = samp
+
+                def body(carry, j):
+                    tok, caches = carry
+                    logits, caches = M.decode_step(
+                        p, tok[:, None], pos + j, caches, dcfg, dpolicy,
+                        impl=impl, block_tables=bt, fused_attn=False)
+                    nxt = M.sample_tokens(logits[:, -1], temps, top_ks,
+                                          top_ps, seeds, counters + j)
+                    return (nxt, caches), nxt
+
+                (_, caches), drafts = jax.lax.scan(
+                    body, (tok0, caches), jnp.arange(k, dtype=jnp.int32))
+                return drafts.T, caches
+
+            if self.spec.shares_cache and self.cache.paged:
+                self._spec_draft = jax.jit(
+                    lambda p, tok0, pos, bt, caches, samp: draft_loop(
+                        p, tok0, pos, caches, samp, bt=bt))
+            else:
+                self._spec_draft = jax.jit(draft_loop)
+
+            spec_ps = self.cache.page_size if self.cache.paged else None
+
+            def verify(p, toks, pos, n_real, caches, samp, bt=None):
+                return M.spec_verify_step(
+                    p, toks, pos, n_real, *samp, caches, cfg, policy,
+                    impl=impl, block_tables=bt, page_size=spec_ps)
+
+            if self.cache.paged:
+                self._spec_verify = jax.jit(
+                    lambda p, toks, pos, nr, bt, caches, samp: verify(
+                        p, toks, pos, nr, caches, samp, bt=bt))
+            else:
+                self._spec_verify = jax.jit(verify)
 
         # metrics accumulators
         self._decode_steps = 0
@@ -543,6 +609,8 @@ class ServeEngine:
         self._spec_remaining[slot] = 0
         self._progress += 1
         self.cache.release(slot)
+        if self.spec is not None:
+            self.spec.on_release(slot, self)
         if status == CANCELLED:
             self._cancelled += 1
         else:
@@ -652,6 +720,10 @@ class ServeEngine:
             logits = self.prefiller.prefill(self.cache, slot, req.prompt,
                                             rid=req.rid)
             self.cache.commit(slot, req.prompt)
+            if self.spec is not None:
+                # draft-side admission (e.g. DraftModel prefills its own
+                # cache); runs before the first emit so round one can draft
+                self.spec.on_admit(slot, req.prompt, self)
             if self.trace is not None:
                 self.trace.span("prefill", cat="request", t0=req.t_admit,
                                 t1=time.perf_counter(),
@@ -835,6 +907,128 @@ class ServeEngine:
                 continue  # released after this step was issued: speculative
             self._emit(s, int(nxt[s]))
 
+    # --- speculative decoding: the round ------------------------------------
+
+    def _spec_round(self) -> None:
+        """One speculation round over every active slot (serialized mode).
+
+        Slots with at least k+1 budget left PARTICIPATE: the draft policy
+        proposes k tokens (one scanned jit), then the target scores all
+        k+1 positions in ONE ``spec_verify_step`` call and the longest
+        draft==target prefix is accepted host-side — the accepted tokens
+        plus the bonus token at the first mismatch retire together, so a
+        round emits 1..k+1 tokens per lane. Slots nearer their budget than
+        k+1 ride the verify as plain 1-token decode lanes (``n_real=1``),
+        so a round is never narrower than a serialized step. Rejected rows
+        roll back through the cache manager's ``truncate`` verb: positions
+        rewind, now-empty pages return to the pool."""
+        k = self.spec_k
+        W = k + 1
+        t0 = time.perf_counter()
+        toks = np.zeros((self.n_slots, W), np.int32)
+        n_real = np.zeros(self.n_slots, np.int32)
+        participants: list[int] = []
+        active: list[int] = []
+        for s, r in enumerate(self.slot_req):
+            if r is None:
+                continue
+            active.append(s)
+            toks[s, 0] = r.out[-1]
+            if self.slot_remaining[s] >= W:
+                participants.append(s)
+                n_real[s] = W
+                self.cache.prepare(s, W)  # paged: draw the whole window
+            else:
+                n_real[s] = 1
+                self.cache.prepare(s, 1)
+        samp = (host_copy(self._temps), host_copy(self._top_ks),
+                host_copy(self._top_ps), host_copy(self._seeds),
+                host_copy(self._counters))
+        drafts = None
+        if participants:
+            # non-participants draft at the out-of-range position sentinel:
+            # their cache writes scatter-drop, their drafts are junk token
+            # ids nobody reads (the verify pad scrub covers their columns)
+            src = self.cache.pos if self.spec.shares_cache else self.spec.pos
+            dpos = np.full(self.n_slots, 2**30, np.int32)
+            for s in participants:
+                dpos[s] = src[s]
+            tok0 = jnp.asarray(toks[:, 0].copy())
+            td0 = time.perf_counter()
+            if self.spec.shares_cache:
+                if self.cache.paged:
+                    drafts, self.cache.caches = self._spec_draft(
+                        self.spec.params, tok0, jnp.asarray(dpos),
+                        host_copy(self.cache.block_tables),
+                        self.cache.caches, samp)
+                else:
+                    drafts, self.cache.caches = self._spec_draft(
+                        self.spec.params, tok0, jnp.asarray(dpos),
+                        self.cache.caches, samp)
+            else:
+                drafts, self.spec.caches = self._spec_draft(
+                    self.spec.params, tok0, jnp.asarray(dpos),
+                    self.spec.caches, samp)
+            drafts = np.asarray(drafts)
+            toks[:, 1:] = drafts
+            if self.trace is not None:
+                self.trace.span("draft", cat="engine", t0=td0,
+                                t1=time.perf_counter(), track=ENGINE_TRACK,
+                                lanes=len(participants), k=k,
+                                policy=self.spec.name)
+        tv0 = time.perf_counter()
+        if self.cache.paged:
+            targets, self.cache.caches = self._spec_verify(
+                self.params, jnp.asarray(toks), host_copy(self.cache.pos),
+                jnp.asarray(n_real), host_copy(self.cache.block_tables),
+                self.cache.caches, samp)
+        else:
+            targets, self.cache.caches = self._spec_verify(
+                self.params, jnp.asarray(toks), host_copy(self.cache.pos),
+                jnp.asarray(n_real), self.cache.caches, samp)
+        targets = np.asarray(targets)  # the round's one host sync
+        self._decode_steps += 1
+        self._spec_rounds += 1
+        if self.trace is not None:
+            self.trace.span("verify", cat="engine", t0=tv0,
+                            t1=time.perf_counter(), track=ENGINE_TRACK,
+                            lanes=len(active), width=W)
+        for s in active:
+            r = self.slot_req[s]
+            if n_real[s] == W:
+                dr, tg = drafts[s], targets[s]
+                m = 0
+                while m < k and dr[m] == tg[m]:
+                    m += 1
+                # cache bookkeeping BEFORE emitting: _emit may release the
+                # slot (budget / stop / cancel callback) and releasing
+                # resets positions wholesale
+                self.cache.advance(s, W)
+                self.cache.truncate(s, k - m)
+                if not self.spec.shares_cache:
+                    self.spec.pos[s] = int(self.cache.pos[s])
+                self._spec_proposed += k
+                self._spec_accepted += m
+                self._h_spec_len.observe(m + 1)
+                for j in range(m + 1):
+                    self._emit(s, int(tg[j]))
+                    if self.slot_req[s] is not r or r.status != ACTIVE:
+                        break  # released mid-round: drop the unretired tail
+            else:
+                self.cache.advance(s, 1)
+                self._emit(s, int(targets[s, 0]))
+            self._progress += 1
+        now = time.perf_counter()
+        self.monitor.observe(now - t0)
+        if self.trace is not None:
+            self.trace.span("spec_step", cat="engine", t0=t0, t1=now,
+                            track=ENGINE_TRACK, step=self._decode_steps - 1,
+                            decode_lanes=len(active),
+                            spec_lanes=len(participants),
+                            **self._cache_deltas())
+            self.trace.counter("queue_depth", self.scheduler.pending(),
+                               ts=now)
+
     def step(self) -> bool:
         """One engine iteration. The caller owns the loop: ``drain()``,
         ``handle.tokens()``, and ``handle.result()`` all lower to repeated
@@ -858,6 +1052,10 @@ class ServeEngine:
                 self._admit()
                 if not self._dispatch() and self._tickets:
                     self._retire_one()
+            elif self.spec is not None:
+                self._admit()
+                if self._active():
+                    self._spec_round()
             else:
                 self._admit()
                 if self._active():
@@ -978,6 +1176,17 @@ class ServeEngine:
             "inflight_depth": self.inflight_depth if self.mixed else 0,
             "inflight": len(self._tickets),
             "fused_attn": self.fused_attn,
+            # speculative decoding (spec/ namespace; all host counters)
+            "spec/enabled": self.spec is not None,
+            "spec/policy": self.spec.name if self.spec is not None else "off",
+            "spec/k": self.spec_k if self.spec is not None else 0,
+            "spec/rounds": self._spec_rounds,
+            "spec/proposed": self._spec_proposed,
+            "spec/accepted": self._spec_accepted,
+            "spec/acceptance_rate": (
+                self._spec_accepted / self._spec_proposed
+                if self._spec_proposed else 0.0),
+            **self._h_spec_len.summary("spec/accepted_len"),
             "prefill_mode": self.prefiller.name,
             "prefill_chunk": self.prefiller.chunk,
             "prefill_jit_calls": self.prefiller.jit_calls,

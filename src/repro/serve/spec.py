@@ -1,0 +1,247 @@
+"""Speculative decoding: draft policies for the serving engine.
+
+The engine's hot loop emits ONE token per jitted decode step. Speculation
+trades k cheap *draft* forwards plus one batched *verify* forward for up to
+k+1 emitted tokens per round — worth it exactly when drafting is much
+cheaper than the target step, which is this repo's mixed-precision thesis
+applied to serving: the 27-cell kernel matrix (kernels/dispatch.py) already
+compiles the SAME weights at any registered precision, so the cheapest
+draft model is the target itself re-dispatched at 4-bit weights.
+
+This module owns the :class:`DraftPolicy` seam — WHO drafts. The engine
+owns the round mechanics (``ServeEngine._spec_round``): draft k tokens in
+one scanned jit, verify all k+1 positions in one ``models.model.
+spec_verify_step`` call, accept the longest draft==target prefix host-side,
+emit the accepted tokens plus the bonus token at the first mismatch, and
+roll rejected cache rows back through the manager ``truncate`` verb.
+
+Determinism contract: the verify step samples every candidate through
+``sample_tokens``'s counter-based PRNG at the emission index the serialized
+engine would use, from logits computed over exactly the accepted prefix —
+so accepted streams are bit-identical to the non-speculative engine
+(greedy AND seeded) on every cache backend and kernel impl. Draft quality
+only moves the ACCEPTANCE RATE, never the tokens.
+
+Two implementations:
+
+- :class:`SelfDraft` (``spec="self4"``): zero extra weights. The target's
+  packed integer weights are re-quantized to 4-bit (an identity share when
+  a layer is already 4-bit, e.g. the ``w4a8`` policy) and the draft shares
+  the target's KV cache — draft-written rows are overwritten by verify's
+  own cache update before any later read, and rows at or beyond a lane's
+  position are causally masked, so no separate draft cache exists at all.
+- :class:`DraftModel` (``spec="draft"``): a separate small model (default:
+  the family-preserving ``configs.reduced`` shape at the target's vocab)
+  with its own dense KV cache. Its cache is self-healing across rollbacks:
+  every draft step writes its row before any later query reads it, and
+  stale rows past the position are masked — the one gap is the
+  bonus-predecessor row after a full accept, which costs a little
+  acceptance, never correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import pack as P
+from repro.core import quant as Q
+from repro.core.linear import _NAME_TO_CLASS
+from repro.core.policy import LayerPrecision, PrecisionPolicy
+from repro.kernels import dispatch
+from repro.models import model as M
+from repro.serve.cache import _zero_slot
+
+
+def _w4(lp: LayerPrecision) -> LayerPrecision:
+    """4-bit-weight twin of a layer precision (unquantized layers — e.g.
+    the always-BF16 router — keep their precision; activation/output/KV
+    widths are untouched so the draft can share the target's cache)."""
+    if not lp.quantized or lp.w_bits == 4:
+        return lp
+    return dataclasses.replace(lp, w_bits=4)
+
+
+def derive_w4_policy(policy: PrecisionPolicy) -> PrecisionPolicy:
+    """The self-draft precision policy: ``policy`` with every quantized
+    layer class forced to 4-bit weights. Same ``kv_cache_bits`` — the
+    whole point is sharing the target's cache."""
+    return PrecisionPolicy(
+        name=f"{policy.name}+self4",
+        default=_w4(policy.default),
+        per_class={k: _w4(v) for k, v in policy.per_class.items()},
+        kv_cache_bits=policy.kv_cache_bits)
+
+
+def requantize_params_w4(params: dict, policy: PrecisionPolicy) -> dict:
+    """Re-quantize a serving param tree's packed weights to 4 bits.
+
+    Walks the tree exactly like ``core.linear.convert_model_to_serving``
+    (dict nodes keyed by their parent name), but transforms the PACKED
+    representation: unpack at the target policy's width, rescale the
+    integer grid (``round(wq * 7 / qmax_old)``), repack at 4 bits, and
+    fold the grid change into ``eps_w`` (``* qmax_old / 7``) so the
+    dequantized magnitude is preserved. Layers already at 4 bits (or
+    unquantized) are returned AS-IS — the draft tree aliases the target's
+    arrays, so a uniform-4-bit target costs zero extra weight memory.
+    Pack/unpack are last-axis ops, so stacked (scan) and expert (E-leading)
+    weights need no vmap."""
+    spec4 = Q.WGT_SPECS[4]
+
+    def repack(node: dict, lp: LayerPrecision) -> dict:
+        spec_old = Q.WGT_SPECS[lp.w_bits]
+        wq = P.unpack(node["w_packed"], lp.w_bits, signed=True)
+        wq4 = jnp.clip(
+            jnp.round(wq.astype(jnp.float32) * (spec4.qmax / spec_old.qmax)),
+            spec4.qmin, spec4.qmax).astype(jnp.int8)
+        out = dict(node)
+        out["w_packed"] = P.pack(wq4, 4)
+        out["eps_w"] = (jnp.asarray(node["eps_w"], jnp.float32)
+                        * (spec_old.qmax / spec4.qmax))
+        return out
+
+    def walk(node, parent=""):
+        if isinstance(node, dict):
+            if "w_packed" in node and parent in _NAME_TO_CLASS:
+                lp = policy.of(_NAME_TO_CLASS[parent])
+                if not lp.quantized or lp.w_bits == 4:
+                    return node
+                return repack(node, lp)
+            return {k: walk(v, k) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, parent) for v in node]
+        return node
+
+    return walk(params)
+
+
+class DraftPolicy:
+    """The WHO-drafts seam. A policy carries, after :meth:`build`: the
+    draft ``params`` / ``cfg`` / ``policy`` the engine's scanned draft jit
+    closes over, and ``shares_cache`` — True when drafting writes through
+    the TARGET's cache manager (positions, block tables and all), False
+    when the policy owns a private dense cache (``caches`` pytree + ``pos``
+    vector the engine keeps in sync with the target's positions)."""
+
+    name = "draft"
+    shares_cache = False
+
+    def build(self, engine) -> None:
+        """Derive draft params/config at engine construction (fail fast —
+        e.g. an unregistered kernel cell — before any request is taken)."""
+        raise NotImplementedError
+
+    def on_admit(self, slot, prompt, engine) -> None:
+        """A request was admitted and target-prefilled into ``slot``."""
+
+    def on_release(self, slot, engine) -> None:
+        """``slot`` left through the engine's ``_release`` seam (done,
+        stopped, or cancelled — including mid-speculation)."""
+
+
+class SelfDraft(DraftPolicy):
+    """Draft with the target model itself at 4-bit weights, through the
+    same kernel dispatch matrix — zero extra weights (identity aliases
+    where the target is already 4-bit), zero extra cache, zero prefill."""
+
+    name = "self4"
+    shares_cache = True
+
+    def build(self, engine) -> None:
+        self.cfg = engine.cfg
+        self.policy = derive_w4_policy(engine.policy)
+        # same construction-time guarantee the engine gives its own policy
+        dispatch.ensure_policy_supported(self.policy)
+        self.params = requantize_params_w4(engine.params, engine.policy)
+
+
+class DraftModel(DraftPolicy):
+    """Draft with a separate small model over the target's vocabulary.
+
+    Defaults to the family-preserving ``configs.reduced`` shape with the
+    vocab forced back to the target's (drafts must be valid target tokens)
+    and freshly initialized serving weights; pass ``cfg``/``params``/
+    ``policy`` for a real distilled draft. Owns a dense (slot-layout) KV
+    cache mirroring the target's positions: prompts are prefilled
+    token-by-token at admission (one S=1 jit, no per-length retraces)."""
+
+    name = "draft"
+    shares_cache = False
+
+    def __init__(self, cfg=None, policy: Optional[PrecisionPolicy] = None,
+                 params: Optional[dict] = None, *, seed: int = 1):
+        self._cfg, self._policy, self._params = cfg, policy, params
+        self._seed = seed
+
+    def build(self, engine) -> None:
+        self.cfg = self._cfg if self._cfg is not None else dataclasses.replace(
+            configs.reduced(engine.cfg), vocab=engine.cfg.vocab)
+        if self.cfg.vocab != engine.cfg.vocab:
+            raise ValueError(
+                f"draft vocab {self.cfg.vocab} != target vocab "
+                f"{engine.cfg.vocab}: drafted ids would not be target tokens")
+        self.policy = self._policy if self._policy is not None else engine.policy
+        dispatch.ensure_policy_supported(self.policy)
+        self.params = (self._params if self._params is not None else
+                       M.init_params(jax.random.key(self._seed), self.cfg,
+                                     self.policy, mode="serve"))
+        self.caches = M.init_cache(self.cfg, self.policy, engine.n_slots,
+                                   engine.s_max)
+        self.pos = np.zeros(engine.n_slots, np.int32)
+        cfg, policy, impl = self.cfg, self.policy, engine.impl
+
+        def write_one(p, tok, pos, caches):
+            _, caches = M.decode_step(p, tok, pos, caches, cfg, policy,
+                                      impl=impl)
+            return caches
+
+        self._write_one = jax.jit(write_one)
+
+    def on_admit(self, slot, prompt, engine) -> None:
+        # token-by-token prompt entry: lanes other than `slot` are masked
+        # with the out-of-range position sentinel (their scatter drops);
+        # fresh arrays every call — the buffers cross the jit boundary
+        # while we keep mutating the loop state (see serve.boundary)
+        for i, t in enumerate(np.asarray(prompt, np.int32)):
+            toks = np.zeros((engine.n_slots, 1), np.int32)
+            toks[slot, 0] = t
+            pos = np.full(engine.n_slots, 2**30, np.int32)
+            pos[slot] = i
+            self.caches = self._write_one(self.params, jnp.asarray(toks),
+                                          jnp.asarray(pos), self.caches)
+        self.pos[slot] = len(prompt)
+
+    def on_release(self, slot, engine) -> None:
+        # same no-stale-rows recycle the target cache gives its slots
+        if self.pos[slot]:
+            self.caches = _zero_slot(self.caches, jnp.int32(slot))
+            self.pos[slot] = 0
+
+
+#: name -> draft policy class; register here to make a policy
+#: engine-selectable by name (mirrors cache.CACHE_BACKENDS)
+SPEC_POLICIES: dict[str, type] = {
+    "self4": SelfDraft,
+    "draft": DraftModel,
+}
+
+
+def make_spec(spec: Union[str, DraftPolicy, None]) -> Optional[DraftPolicy]:
+    """Resolve a ``ServeEngine(spec=...)`` argument: None/"off" -> no
+    speculation, a registered name -> fresh policy instance, an instance ->
+    passthrough (bring-your-own draft model)."""
+    if spec is None or spec == "off":
+        return None
+    if not isinstance(spec, str):
+        return spec
+    cls = SPEC_POLICIES.get(spec)
+    if cls is None:
+        raise KeyError(
+            f"unknown draft policy {spec!r}; available: "
+            f"{sorted(SPEC_POLICIES)} (or pass a DraftPolicy instance)")
+    return cls()
